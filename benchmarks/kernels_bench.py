@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: block-ELL SpMM vs COO segment-sum SpMV.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code), so wall-times compare the jnp
+oracle implementations; the kernel path is asserted for correctness and its
+structural stats (tiles, fill rate, VMEM working set) are reported — those
+are the TPU-relevant numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph import generators
+from repro.graph.ops import device_graph, spmm, spmv
+from repro.graph.structure import build_block_ell
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def spmm_formats(block: int = 128):
+    rows = [("graph", "n", "m", "B", "coo_us", "bell_us", "tiles", "fill",
+             "vmem_tile_kb")]
+    jit_spmm = jax.jit(spmm)
+    jit_bell = jax.jit(bsr_spmm_ref)
+    for name, gen in (("mesh", lambda: generators.tri_mesh(140, 140)),
+                      ("kmer", lambda: generators.kmer_chains(20_000)),
+                      ("powerlaw", lambda: generators.powerlaw_ba(8_000, 8))):
+        g = gen()
+        dg = device_graph(g)
+        be = build_block_ell(g, block=block)
+        for bt in (1, 8, 128):
+            x = jax.random.normal(jax.random.PRNGKey(0), (g.n, bt))
+            xp = jnp.zeros((be.n, bt)).at[:g.n].set(x)
+            t_coo = _time(jit_spmm, dg, x)
+            t_bell = _time(jit_bell, jnp.asarray(be.block_cols),
+                           jnp.asarray(be.values), xp)
+            n_tiles = be.n_row_blocks * be.slots
+            vmem_kb = (block * block + 2 * block * bt) * 4 / 1024
+            rows.append((name, g.n, g.m, bt,
+                         round(t_coo * 1e6, 1), round(t_bell * 1e6, 1),
+                         n_tiles, round(be.fill_rate, 4), round(vmem_kb, 1)))
+    return rows
+
+
+def cheb_fused_update(n: int = 1_000_000):
+    """Fused vs unfused Chebyshev update (memory-bound vector work)."""
+    from repro.kernels.cheb_step.ref import cheb_step_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    y, t, acc = (jax.random.normal(k, (n,)) for k in ks)
+
+    fused = jax.jit(lambda y, t, acc: cheb_step_ref(y, t, acc, 0.5567))
+
+    @jax.jit
+    def unfused(y, t, acc):
+        t_next = 2.0 * y - t
+        acc2 = acc + 0.5567 * t_next
+        return t_next, acc2
+
+    rows = [("variant", "us_per_call", "bytes_moved_model")]
+    rows.append(("fused(kernel ref)", round(_time(fused, y, t, acc) * 1e6, 1),
+                 5 * n * 4))
+    rows.append(("unfused", round(_time(unfused, y, t, acc) * 1e6, 1),
+                 8 * n * 4))
+    return rows

@@ -1,0 +1,37 @@
+"""Benchmark driver: one section per paper table/figure + kernel benches.
+
+Prints CSV sections; `python -m benchmarks.run [--quick]`.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _emit(title: str, rows):
+    print(f"\n## {title}")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import kernels_bench, paper_tables
+
+    _emit("theory_check (paper §4.2 claims)", paper_tables.theory_check())
+    _emit("figure1_convergence_rate", paper_tables.fig1_convergence_rate())
+    _emit("figure2_relative_error", paper_tables.fig2_relative_error())
+    if not quick:
+        _emit("figure3_err_vs_rounds (NACA0015 stand-in)",
+              paper_tables.fig3_err_vs_rounds_and_time())
+        _emit("table2_iterations_and_time (six datasets)",
+              paper_tables.table2_iterations_and_time())
+        _emit("figure4_time_vs_error (delaunay stand-in)",
+              paper_tables.fig4_time_vs_error())
+        _emit("beyond_paper_basis_ablation (paper §6 future work)",
+              paper_tables.basis_ablation())
+        _emit("kernel_spmm_formats", kernels_bench.spmm_formats())
+        _emit("kernel_cheb_fused_update", kernels_bench.cheb_fused_update())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Serving example: continuous-batched greedy decoding with the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get("h2o-danube-1.8b").smoke_config()  # reduced SWA decoder
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, max_batch=4, max_len=64)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab, rng.integers(3, 12)).astype(np.int32),
+                max_new_tokens=int(rng.integers(4, 12)))
+        for i in range(10)
+    ]
+    print(f"serving {len(requests)} ragged requests on "
+          f"{engine.max_batch} continuous-batching slots ...")
+    engine.run_until_drained(requests)
+    for r in requests:
+        print(f"req {r.rid}: prompt len {len(r.prompt):2d} -> "
+              f"{len(r.out_tokens)} tokens: {r.out_tokens[:8]}")
+    print("all requests drained")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Config registry interface.
+
+Every architecture module exposes an ArchSpec with:
+  full_config()   — the exact assigned configuration (dry-run only)
+  smoke_config()  — reduced same-family config (CPU smoke tests)
+  cells()         — list of Cell(shape, kind, skip_reason)
+  build(shape, multi_pod) -> DryRunPlan for the full config
+  smoke_run(seed) -> dict of output arrays (asserted finite by tests)
+
+DryRunPlan carries everything launch/dryrun.py needs: the step callable,
+abstract args (ShapeDtypeStruct trees), and PartitionSpec trees for
+in_shardings — no real allocation happens for full configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+
+@dataclass(frozen=True)
+class Cell:
+    shape: str
+    kind: str                      # train | prefill | decode | serve | retrieval | pagerank
+    skip_reason: str | None = None
+    extra: bool = False            # beyond the 40 assigned cells (perf variants)
+
+
+@dataclass
+class DryRunPlan:
+    step: Callable                  # positional-args step function
+    abstract_args: tuple            # ShapeDtypeStruct trees
+    in_specs: tuple                 # PartitionSpec trees (same structure)
+    out_specs: Any = None           # optional PartitionSpec tree for outputs
+    donate: tuple = ()              # donated arg indices
+    static: dict = field(default_factory=dict)
+    # analytic FLOPs for one step (MODEL_FLOPS in the roofline tables)
+    model_flops: float = 0.0
+    note: str = ""
+    # XLA cost_analysis counts while-loop bodies ONCE, so scan-over-layers /
+    # microbatch-loop costs are undercounted. cost_model supplies the real
+    # trip counts and a probe builder; launch/dryrun.py compiles the reduced
+    # probes (L1M1, L2M1[, L1M2]) and extrapolates:
+    #   cost(L, M) = a + M*b + M*L*c.
+    # None => the step has no data-independent loops; use costs directly.
+    cost_model: dict | None = None  # {"L": int, "M": int, "probe": fn(L,M)->DryRunPlan}
+
+
+def abstract_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)

@@ -1,0 +1,84 @@
+"""dimenet [arXiv:2003.03123]: 6 blocks, d=128, 8 bilinear, 7 spherical x 6
+radial basis functions. Triplets capped at max_triplets_per_edge=8 on the
+non-molecular shapes (DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import gnn_common as gc
+from repro.models.gnn import dimenet as dn
+
+NAME = "dimenet"
+FAMILY = "gnn"
+
+TRIPLETS_PER_EDGE = 8
+
+
+def full_config(d_in: int = 128):
+    return dn.DimeNetConfig(name=NAME, n_blocks=6, d_hidden=128,
+                            n_bilinear=8, n_spherical=7, n_radial=6,
+                            d_in=d_in, max_triplets_per_edge=TRIPLETS_PER_EDGE)
+
+
+def smoke_config():
+    return dn.DimeNetConfig(name=NAME + "-smoke", n_blocks=2, d_hidden=16,
+                            n_bilinear=4, n_spherical=3, n_radial=4, d_in=12,
+                            max_triplets_per_edge=4)
+
+
+def make_batch(cfg, dims, abstract: bool, seed: int = 0):
+    n, e = dims["n"], dims["e"]
+    t = e * cfg.max_triplets_per_edge
+    batch = gc.graph_arrays(dims, abstract, seed)
+    batch.pop("deg")
+    key = jax.random.PRNGKey(seed + 1)
+    ks = jax.random.split(key, 3)
+    batch["node_feat"] = gc.abstract_or_random((n, cfg.d_in), jnp.float32,
+                                               abstract, ks[0])
+    batch["positions"] = gc.abstract_or_random((n, 3), jnp.float32,
+                                               abstract, ks[1])
+    batch["targets"] = gc.abstract_or_random((n, 1), jnp.float32,
+                                             abstract, ks[2])
+    if abstract:
+        batch["t_kj"] = jax.ShapeDtypeStruct((t,), jnp.int32)
+        batch["t_ji"] = jax.ShapeDtypeStruct((t,), jnp.int32)
+        batch["t_mask"] = jax.ShapeDtypeStruct((t,), jnp.float32)
+    else:
+        snd = np.asarray(batch["senders"])
+        rcv = np.asarray(batch["receivers"])
+        tkj, tji, tmask = dn.build_triplets(snd, rcv, n,
+                                            cfg.max_triplets_per_edge, seed)
+        batch["t_kj"] = jnp.asarray(tkj)
+        batch["t_ji"] = jnp.asarray(tji)
+        batch["t_mask"] = jnp.asarray(tmask)
+    return batch
+
+
+def model_flops(cfg, dims) -> float:
+    n, e, d = dims["n"], dims["e"], cfg.d_hidden
+    t = e * cfg.max_triplets_per_edge
+    nsb = cfg.n_spherical * cfg.n_radial
+    per_block = (2 * e * (cfg.n_radial * d + d * cfg.n_bilinear  # rbf+down
+                          + cfg.n_bilinear * d + 2 * d * d + d * d)  # up+mlp+out
+                 + 2 * t * nsb * cfg.n_bilinear)
+    emb = 2 * e * (2 * cfg.d_in + cfg.n_radial) * d + 2 * e * d * d
+    return cfg.n_blocks * per_block + emb + 2 * n * (d * d + d)
+
+
+def cells():
+    return gc.gnn_cells()
+
+
+def build(shape: str, multi_pod: bool):
+    dims = gc.GNN_SHAPES[shape]
+    cfg = full_config(d_in=dims["d_feat"])
+    return gc.build_gnn_plan(cfg, dn.init_params, dn.loss_fn, make_batch,
+                             shape, multi_pod, model_flops,
+                             layers_field="n_blocks")
+
+
+def smoke_run(seed: int = 0):
+    return gc.run_gnn_smoke(smoke_config(), dn.init_params, dn.loss_fn,
+                            make_batch, seed)

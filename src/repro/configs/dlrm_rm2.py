@@ -1,0 +1,145 @@
+"""dlrm-rm2 [arXiv:1906.00091]: 13 dense + 26 sparse features, embed_dim 64,
+bottom MLP 13-512-256-64, top MLP 512-512-256-1, dot interaction.
+
+Shapes:
+  train_batch     B=65,536  train_step
+  serve_p99       B=512     serve_step (online inference)
+  serve_bulk      B=262,144 serve_step (offline scoring)
+  retrieval_cand  B=1, 1M candidates retrieval_step (batched dot + top-k)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, DryRunPlan
+from repro.distributed import sharding as shard
+from repro.models.recsys import dlrm
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_loop import make_train_step
+
+NAME = "dlrm-rm2"
+FAMILY = "recsys"
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                       n_candidates=1_000_448),  # 1M padded to tile 512 devices
+}
+
+
+def full_config():
+    return dlrm.DLRMConfig(name=NAME)
+
+
+def smoke_config():
+    return dlrm.DLRMConfig(name=NAME + "-smoke",
+                           vocab_sizes=(64, 96, 128, 32), n_sparse=4,
+                           embed_dim=16, bot_mlp=(13, 32, 16),
+                           top_mlp=(32, 32, 1))
+
+
+def cells():
+    return [Cell(shape=s, kind=i["kind"]) for s, i in SHAPES.items()]
+
+
+def _make_batch(cfg, bsz: int, abstract: bool, seed: int = 0,
+                with_labels: bool = True):
+    if abstract:
+        b = {
+            "dense": jax.ShapeDtypeStruct((bsz, cfg.n_dense), jnp.float32),
+            "sparse_ids": jax.ShapeDtypeStruct(
+                (bsz, cfg.n_sparse, cfg.bag_size), jnp.int32),
+        }
+        if with_labels:
+            b["labels"] = jax.ShapeDtypeStruct((bsz,), jnp.float32)
+        return b
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    offs = jnp.asarray(cfg.offsets)
+    per = jax.random.randint(ks[1], (bsz, cfg.n_sparse, cfg.bag_size), 0,
+                             jnp.asarray(cfg.vocab_sizes)[None, :, None])
+    b = {
+        "dense": jax.random.normal(ks[0], (bsz, cfg.n_dense), jnp.float32),
+        "sparse_ids": per + offs[None, :, None],
+    }
+    if with_labels:
+        b["labels"] = jax.random.bernoulli(ks[2], 0.3, (bsz,)).astype(jnp.float32)
+    return b
+
+
+def model_flops(cfg, bsz: int, kind: str) -> float:
+    mlps = cfg.n_params() - cfg.total_rows * cfg.embed_dim
+    f = cfg.n_sparse + 1
+    inter = bsz * f * f * cfg.embed_dim
+    fwd = 2 * bsz * mlps + 2 * inter
+    return 3 * fwd if kind == "train" else fwd
+
+
+def build(shape: str, multi_pod: bool):
+    cfg = full_config()
+    info = SHAPES[shape]
+    bsz = info["batch"]
+    aparams = jax.eval_shape(partial(dlrm.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = shard.dlrm_param_specs(aparams, multi_pod)
+    bx = shard.batch_axes(multi_pod)
+
+    if info["kind"] == "train":
+        opt_cfg = AdamWConfig()
+        aopt = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), aparams)
+        ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+        batch = _make_batch(cfg, bsz, abstract=True)
+        bspecs = jax.tree.map(
+            lambda leaf: P(bx, *([None] * (leaf.ndim - 1))), batch)
+        step = make_train_step(partial(dlrm.loss_fn, cfg=cfg), opt_cfg,
+                               num_microbatches=1, donate=False)
+        return DryRunPlan(step=step, abstract_args=(aparams, aopt, batch),
+                          in_specs=(pspecs, ospecs, bspecs), donate=(0, 1),
+                          model_flops=model_flops(cfg, bsz, "train"))
+
+    if info["kind"] == "serve":
+        batch = _make_batch(cfg, bsz, abstract=True, with_labels=False)
+        bspecs = jax.tree.map(
+            lambda leaf: P(bx, *([None] * (leaf.ndim - 1))), batch)
+        step = jax.jit(partial(dlrm.serve_step, cfg=cfg))
+        return DryRunPlan(step=step, abstract_args=(aparams, batch),
+                          in_specs=(pspecs, bspecs),
+                          model_flops=model_flops(cfg, bsz, "serve"))
+
+    # retrieval: one query, 1M candidates
+    nc = info["n_candidates"]
+    batch = {
+        "dense": jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+        "candidates": jax.ShapeDtypeStruct((nc, cfg.embed_dim), jnp.float32),
+    }
+    bspecs = {"dense": P(None, None),
+              "candidates": P(shard.flat_axes(multi_pod), None)}
+    step = jax.jit(partial(dlrm.retrieval_step, cfg=cfg))
+    return DryRunPlan(step=step, abstract_args=(aparams, batch),
+                      in_specs=(pspecs, bspecs),
+                      model_flops=2.0 * nc * cfg.embed_dim)
+
+
+def smoke_run(seed: int = 0):
+    cfg = smoke_config()
+    key = jax.random.PRNGKey(seed)
+    params = dlrm.init_params(key, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    batch = _make_batch(cfg, 16, abstract=False, seed=seed)
+    step = make_train_step(partial(dlrm.loss_fn, cfg=cfg), opt_cfg,
+                           num_microbatches=1, donate=False)
+    _, _, metrics = step(params, opt, batch)
+    scores, _ = dlrm.retrieval_step(
+        params, {"dense": batch["dense"][:1],
+                 "candidates": jax.random.normal(key, (512, cfg.embed_dim))},
+        cfg, top_k=8)
+    metrics["retrieval_top"] = scores[0]
+    return metrics

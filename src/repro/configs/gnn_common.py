@@ -1,0 +1,142 @@
+"""Shared machinery for the GNN-family architecture configs.
+
+Shapes (assignment):
+  full_graph_sm  n=2,708  e=10,556  d_feat=1,433   (full-batch; cora-scale)
+  minibatch_lg   n=232,965 e=114,615,892 batch_nodes=1,024 fanout=15-10
+                 -> the training step consumes the PADDED SAMPLED SUBGRAPH
+                    (graph.sampler supplies it); frontier/edge sizes below.
+  ogb_products   n=2,449,029 e=61,859,140 d_feat=100 (full-batch-large)
+  molecule       n=30 e=64 batch=128 (block-diagonal batched small graphs)
+
+Node/edge counts are padded to multiples of 1024 so they tile the 512-way
+mesh evenly (the data pipeline pads with masked entries).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, DryRunPlan
+from repro.distributed import sharding as shard
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_loop import make_train_step
+
+
+def _pad(x: int, q: int = 1024) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def _sampled_dims(batch_nodes: int, fanout):
+    """Frontier/edge sizes of the padded fanout-sampled subgraph."""
+    seeds = batch_nodes
+    edges = 0
+    frontier = seeds
+    for f in fanout:
+        edges += frontier * f
+        frontier += frontier * f
+    return frontier, edges
+
+
+_MB_FRONTIER, _MB_EDGES = _sampled_dims(1024, (15, 10))
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=_pad(2708), e=_pad(10556), d_feat=1433,
+                          note="full-batch small (cora-scale)"),
+    "minibatch_lg": dict(n=_pad(_MB_FRONTIER), e=_pad(_MB_EDGES), d_feat=602,
+                         note="fanout-15/10-sampled subgraph of the "
+                              "232,965-node graph (sampler in graph/sampler.py)"),
+    "ogb_products": dict(n=_pad(2_449_029), e=_pad(61_859_140), d_feat=100,
+                         note="full-batch large"),
+    "molecule": dict(n=128 * 30, e=_pad(128 * 64 * 2), d_feat=16,
+                     note="128 batched 30-node molecules (block-diagonal)"),
+}
+
+
+def gnn_cells():
+    return [Cell(shape=s, kind="train") for s in GNN_SHAPES]
+
+
+def build_gnn_plan(arch_cfg, init_params, loss_fn, batch_builder,
+                   shape: str, multi_pod: bool,
+                   model_flops_fn=None, layers_field: str = "n_layers",
+                   _probe_layers: int | None = None) -> DryRunPlan:
+    import dataclasses as dc
+    dims = GNN_SHAPES[shape]
+    if _probe_layers is not None:
+        arch_cfg = dc.replace(arch_cfg, **{layers_field: _probe_layers},
+                          scan_unroll=True)
+    aparams = jax.eval_shape(partial(init_params, cfg=arch_cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = shard.replicated_specs(aparams)
+    batch = batch_builder(arch_cfg, dims, abstract=True)
+    bspecs = shard.gnn_batch_specs(batch, multi_pod)
+    opt_cfg = AdamWConfig()
+    aopt = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), aparams)
+    ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+    step = make_train_step(partial(loss_fn, cfg=arch_cfg), opt_cfg,
+                           num_microbatches=1, donate=True)
+    mf = model_flops_fn(arch_cfg, dims) if model_flops_fn else 0.0
+    plan = DryRunPlan(step=step, abstract_args=(aparams, aopt, batch),
+                      in_specs=(pspecs, ospecs, bspecs), donate=(0, 1),
+                      model_flops=3.0 * mf,  # train = fwd + ~2x fwd for bwd
+                      note=dims["note"])
+    if _probe_layers is None:
+        plan.cost_model = {
+            "L": getattr(arch_cfg, layers_field), "M": 1,
+            "probe": lambda L, M: build_gnn_plan(
+                arch_cfg, init_params, loss_fn, batch_builder, shape,
+                multi_pod, model_flops_fn, layers_field, _probe_layers=L),
+        }
+    return plan
+
+
+def abstract_or_random(shape, dtype, abstract: bool, key=None, maxval=None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, 0, maxval or 2).astype(dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
+def graph_arrays(dims, abstract: bool, seed: int = 0):
+    """senders/receivers/deg (+mask) for a synthetic graph of these dims."""
+    n, e = dims["n"], dims["e"]
+    if abstract:
+        return {
+            "senders": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "receivers": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "deg": jax.ShapeDtypeStruct((n,), jnp.float32),
+            "node_mask": jax.ShapeDtypeStruct((n,), jnp.float32),
+        }
+    rng = np.random.default_rng(seed)
+    snd = rng.integers(0, n, e).astype(np.int32)
+    rcv = rng.integers(0, n, e).astype(np.int32)
+    deg = np.bincount(snd, minlength=n).astype(np.float32)
+    return {
+        "senders": jnp.asarray(snd),
+        "receivers": jnp.asarray(rcv),
+        "deg": jnp.asarray(deg),
+        "node_mask": jnp.ones((n,), jnp.float32),
+    }
+
+
+def gnn_smoke_dims(d_feat: int = 12):
+    return dict(n=96, e=320, d_feat=d_feat, note="smoke")
+
+
+def run_gnn_smoke(arch_cfg, init_params, loss_fn, batch_builder,
+                  seed: int = 0, dims=None):
+    dims = dims or gnn_smoke_dims()
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg=arch_cfg)
+    batch = batch_builder(arch_cfg, dims, abstract=False, seed=seed)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    step = make_train_step(partial(loss_fn, cfg=arch_cfg), opt_cfg,
+                           num_microbatches=1, donate=False)
+    _, _, metrics = step(params, opt, batch)
+    return metrics

@@ -1,0 +1,134 @@
+"""graphcast [arXiv:2212.12794]: 16L processor, d=512, mesh refinement 6
+(40,962 mesh nodes, 327,660 multi-level directed mesh edges), 227 output
+vars. The input graph of each assigned shape plays the grid role; grid<->
+mesh bipartite edges are synthetic nearest-assignment (DESIGN.md §4)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import gnn_common as gc
+from repro.models.gnn import graphcast as gcast
+
+NAME = "graphcast"
+FAMILY = "gnn"
+
+G2M_PER_GRID = 4
+M2G_PER_GRID = 3
+
+
+def full_config(d_in: int = 227):
+    return gcast.GraphCastConfig(name=NAME, n_layers=16, d_hidden=512,
+                                 mesh_refinement=6, n_vars=227)
+
+
+def smoke_config():
+    return gcast.GraphCastConfig(name=NAME + "-smoke", n_layers=2,
+                                 d_hidden=16, mesh_refinement=1, n_vars=6)
+
+
+def _init(key, cfg, d_in):
+    # patch the grid embedder input width to the shape's d_feat
+    params = gcast.init_params(key, cfg)
+    from repro.models.gnn.common import lnmlp_init
+    k = jax.random.fold_in(key, 7)
+    params["emb_grid"] = lnmlp_init(
+        k, (d_in,) + (cfg.d_hidden,) * cfg.mlp_layers)
+    return params
+
+
+def _pad512(x: int) -> int:
+    return ((x + 511) // 512) * 512
+
+
+def make_batch(cfg, dims, abstract: bool, seed: int = 0, d_in=None):
+    n_grid = dims["n"]
+    d_in = d_in or dims["d_feat"]
+    # mesh arrays padded to tile the 512-way mesh (padding edges point at a
+    # sacrificial node; masked by construction since their features are 0)
+    n_mesh = _pad512(cfg.n_mesh_nodes)
+    e_mesh = _pad512(cfg.n_mesh_edges)
+    e_g2m = _pad512(n_grid * G2M_PER_GRID)
+    e_m2g = _pad512(n_grid * M2G_PER_GRID)
+    key = jax.random.PRNGKey(seed + 1)
+    ks = jax.random.split(key, 8)
+    ar = gc.abstract_or_random
+    batch = {
+        "grid_feat": ar((n_grid, d_in), jnp.float32, abstract, ks[0]),
+        "mesh_feat": ar((n_mesh, 4), jnp.float32, abstract, ks[1]),
+        "g2m_edge_feat": ar((e_g2m, 4), jnp.float32, abstract, ks[2]),
+        "mesh_edge_feat": ar((e_mesh, 4), jnp.float32, abstract, ks[3]),
+        "m2g_edge_feat": ar((e_m2g, 4), jnp.float32, abstract, ks[4]),
+        "targets": ar((n_grid, cfg.n_vars), jnp.float32, abstract, ks[5]),
+        "node_mask": ar((n_grid,), jnp.float32, abstract, ks[6]),
+    }
+    if abstract:
+        for k_, e_ in (("g2m", e_g2m), ("m2g", e_m2g)):
+            batch[f"{k_}_senders"] = jax.ShapeDtypeStruct((e_,), jnp.int32)
+            batch[f"{k_}_receivers"] = jax.ShapeDtypeStruct((e_,), jnp.int32)
+        batch["mesh_senders"] = jax.ShapeDtypeStruct((e_mesh,), jnp.int32)
+        batch["mesh_receivers"] = jax.ShapeDtypeStruct((e_mesh,), jnp.int32)
+    else:
+        import numpy as np
+        ms, mr = gcast.mesh_topology(cfg.mesh_refinement, seed)
+        pad_e = e_mesh - len(ms)
+        pad_node = n_mesh - 1
+        ms = np.concatenate([ms, np.full(pad_e, pad_node, np.int32)])
+        mr = np.concatenate([mr, np.full(pad_e, pad_node, np.int32)])
+        g2m_s, g2m_r = gcast.grid_mesh_edges(n_grid, cfg.n_mesh_nodes,
+                                             G2M_PER_GRID, seed)
+        m2g_m, m2g_g = gcast.grid_mesh_edges(n_grid, cfg.n_mesh_nodes,
+                                             M2G_PER_GRID, seed + 1)
+        gpad = e_g2m - len(g2m_s)
+        g2m_s = np.concatenate([g2m_s, np.zeros(gpad, np.int32)])
+        g2m_r = np.concatenate([g2m_r, np.full(gpad, pad_node, np.int32)])
+        mpad = e_m2g - len(m2g_m)
+        m2g_m = np.concatenate([m2g_m, np.full(mpad, pad_node, np.int32)])
+        m2g_g = np.concatenate([m2g_g, np.zeros(mpad, np.int32)])
+        batch["mesh_senders"] = jnp.asarray(ms)
+        batch["mesh_receivers"] = jnp.asarray(mr)
+        batch["g2m_senders"] = jnp.asarray(g2m_s)
+        batch["g2m_receivers"] = jnp.asarray(g2m_r)
+        batch["m2g_senders"] = jnp.asarray(m2g_g)   # mesh -> grid: senders=mesh
+        batch["m2g_receivers"] = jnp.asarray(m2g_m)
+        # fix: senders are mesh ids, receivers grid ids
+        batch["m2g_senders"], batch["m2g_receivers"] = (
+            jnp.asarray(m2g_m), jnp.asarray(m2g_g))
+        if batch["node_mask"] is not None:
+            batch["node_mask"] = jnp.ones((n_grid,), jnp.float32)
+    return batch
+
+
+def model_flops(cfg, dims) -> float:
+    d = cfg.d_hidden
+    n_grid, n_mesh = dims["n"], cfg.n_mesh_nodes
+    e_mesh = cfg.n_mesh_edges
+    per_layer = 2 * e_mesh * (3 * d * d + d * d) + 2 * n_mesh * (3 * d * d)
+    enc = 2 * n_grid * dims["d_feat"] * d + \
+        2 * n_grid * G2M_PER_GRID * 4 * d * d
+    dec = 2 * n_grid * M2G_PER_GRID * 4 * d * d + \
+        2 * n_grid * (d * d + d * cfg.n_vars)
+    return cfg.n_layers * per_layer + enc + dec
+
+
+def cells():
+    return gc.gnn_cells()
+
+
+def build(shape: str, multi_pod: bool):
+    dims = gc.GNN_SHAPES[shape]
+    cfg = full_config()
+    return gc.build_gnn_plan(
+        cfg, partial(_init, d_in=dims["d_feat"]), gcast.loss_fn,
+        partial(make_batch, d_in=dims["d_feat"]), shape, multi_pod,
+        model_flops)
+
+
+def smoke_run(seed: int = 0):
+    cfg = smoke_config()
+    dims = gc.gnn_smoke_dims(d_feat=12)
+    return gc.run_gnn_smoke(cfg, partial(_init, d_in=12), gcast.loss_fn,
+                            partial(make_batch, d_in=12), seed, dims=dims)

@@ -1,0 +1,171 @@
+"""Shared machinery for the LM-family architecture configs.
+
+Shapes (assignment):
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill (serve)
+  decode_32k   cache 32768, global_batch 128  -> decode_step (serve)
+  long_500k    cache 524288, global_batch 1   -> decode_step; ONLY for
+               sub-quadratic archs (SWA); skipped for pure full-attention
+               archs per the assignment (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, DryRunPlan
+from repro.distributed import sharding as shard
+from repro.models import transformer as tf
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_loop import make_train_step
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq=524288, global_batch=1),
+}
+
+
+def lm_cells(cfg: tf.TransformerConfig):
+    cells = []
+    for name, info in LM_SHAPES.items():
+        skip = None
+        if name == "long_500k" and cfg.sliding_window is None:
+            skip = ("pure full-attention arch: 500k decode requires "
+                    "sub-quadratic attention (assignment rule)")
+        cells.append(Cell(shape=name, kind=info["kind"], skip_reason=skip))
+    return cells
+
+
+def _abstract_params(cfg: tf.TransformerConfig):
+    return jax.eval_shape(partial(tf.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _abstract_opt(aparams, opt_cfg: AdamWConfig):
+    return jax.eval_shape(partial(adamw_init, cfg=opt_cfg), aparams)
+
+
+def lm_attn_flops(cfg: tf.TransformerConfig, batch: int, seq: int) -> float:
+    """Forward attention flops: QK^T + PV, causal-halved, all layers."""
+    win = cfg.sliding_window
+    eff = seq if win is None else min(seq, 2 * win)
+    return cfg.n_layers * 2.0 * batch * seq * eff * cfg.n_heads * cfg.head_dim
+
+
+def lm_train_flops(cfg: tf.TransformerConfig, tokens: int,
+                   batch: int = 1, seq: int | None = None) -> float:
+    """MODEL_FLOPS = 6 * N_active * D + 3x attention forward."""
+    base = 6.0 * cfg.n_active_params() * tokens
+    if seq:
+        base += 3.0 * lm_attn_flops(cfg, batch, seq)
+    return base
+
+
+def lm_decode_flops(cfg: tf.TransformerConfig, batch: int, cache: int) -> float:
+    """Per decode step: 2*N_active matmul flops + attention over the cache."""
+    attn = cfg.n_layers * batch * 4 * cache * cfg.n_heads * cfg.head_dim
+    return 2.0 * cfg.n_active_params() * batch + attn
+
+
+def build_lm_plan(cfg: tf.TransformerConfig, shape: str, multi_pod: bool,
+                  opt_cfg: AdamWConfig | None = None,
+                  num_microbatches: int | None = None,
+                  _override: dict | None = None) -> DryRunPlan:
+    """_override (probe use only): {"n_layers": L, "batch": B, "nm": M}."""
+    import dataclasses as dc
+    info = LM_SHAPES[shape]
+    kind = info["kind"]
+    bsz, seq = info["global_batch"], info["seq"]
+    if _override:
+        cfg = dc.replace(cfg, n_layers=_override["n_layers"],
+                         scan_unroll=True,
+                         q_chunk=max(cfg.q_chunk, seq // 8),
+                         k_chunk=max(cfg.k_chunk, seq // 8))
+        bsz = _override.get("batch", bsz)
+    aparams = _abstract_params(cfg)
+    pspecs = shard.lm_param_specs(cfg, multi_pod)
+    bx = shard.batch_axes(multi_pod)
+    n_dp = 32 if multi_pod else 16
+    bx_or_none = bx if bsz % n_dp == 0 else None
+
+    if kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        nm = num_microbatches or max(1, bsz // 32)
+        micro = (info["global_batch"] if not _override else bsz) // nm
+        if _override:
+            nm = _override["nm"]
+            micro = bsz // nm
+        aopt = _abstract_opt(aparams, opt_cfg)
+        ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+        batch = {"tokens": jax.ShapeDtypeStruct((bsz, seq + 1), jnp.int32)}
+        bspecs = {"tokens": P(bx_or_none, None)}
+        loss = partial(tf.loss_fn, cfg=cfg)
+        step = make_train_step(lambda p, b: loss(p, b), opt_cfg,
+                               num_microbatches=nm, donate=True,
+                               grad_specs=pspecs,
+                               micro_unroll=bool(_override))
+        plan = DryRunPlan(step=step, abstract_args=(aparams, aopt, batch),
+                          in_specs=(pspecs, ospecs, bspecs),
+                          donate=(0, 1),
+                          model_flops=lm_train_flops(cfg, bsz * seq, bsz, seq),
+                          static={"microbatches": nm})
+        if not _override:
+            plan.cost_model = {
+                "L": cfg.n_layers, "M": nm,
+                "probe": lambda L, M: build_lm_plan(
+                    cfg, shape, multi_pod, opt_cfg,
+                    _override={"n_layers": L, "batch": micro * M, "nm": M}),
+            }
+        return plan
+
+    if kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((bsz, seq), jnp.int32)
+        step = jax.jit(partial(tf.prefill, cfg=cfg))
+        plan = DryRunPlan(step=step, abstract_args=(aparams, tokens),
+                          in_specs=(pspecs, P(bx_or_none, None)),
+                          model_flops=2.0 * cfg.n_active_params() * bsz * seq
+                          + lm_attn_flops(cfg, bsz, seq))
+    else:
+        # decode: one new token against a cache of `seq`
+        cache_shape = (cfg.n_layers, bsz, seq, cfg.n_kv_heads, cfg.head_dim)
+        kv = (jax.ShapeDtypeStruct(cache_shape, cfg.cdtype),) * 2
+        cache_spec = P(None, bx_or_none, "model", None, None)
+        token = jax.ShapeDtypeStruct((bsz, 1), jnp.int32)
+        clen = jax.ShapeDtypeStruct((), jnp.int32)
+        step = jax.jit(partial(tf.decode_step, cfg=cfg), donate_argnums=(2,))
+        plan = DryRunPlan(step=step,
+                          abstract_args=(aparams, token, kv, clen),
+                          in_specs=(pspecs, P(bx_or_none, None),
+                                    (cache_spec, cache_spec), P()),
+                          donate=(2,),
+                          model_flops=lm_decode_flops(cfg, bsz, seq))
+    if not _override:
+        plan.cost_model = {
+            "L": cfg.n_layers, "M": 1,
+            "probe": lambda L, M: build_lm_plan(
+                cfg, shape, multi_pod, opt_cfg,
+                _override={"n_layers": L}),
+        }
+    return plan
+
+
+def lm_smoke_run(cfg: tf.TransformerConfig, seed: int = 0):
+    """One CPU train step + one prefill+decode on the reduced config."""
+    key = jax.random.PRNGKey(seed)
+    params = tf.init_params(key, cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    tokens = jax.random.randint(key, (2, 17), 0, cfg.vocab)
+    step = make_train_step(partial(tf.loss_fn, cfg=cfg), opt_cfg,
+                           num_microbatches=1, donate=False)
+    params2, opt2, metrics = step(params, opt, {"tokens": tokens})
+    logits, kv = tf.prefill(params2, tokens[:, :-1], cfg, pad_to=32)
+    nxt = jnp.argmax(logits, -1)[:, None]
+    logits2, _ = tf.decode_step(params2, nxt, kv, jnp.int32(16), cfg)
+    return {"loss": metrics["loss"], "grad_norm": metrics["grad_norm"],
+            "logits": logits2}

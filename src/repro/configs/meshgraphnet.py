@@ -1,0 +1,64 @@
+"""meshgraphnet [arXiv:2010.03409]: 15L, d=128, sum aggregator, 2-layer MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import gnn_common as gc
+from repro.models.gnn import meshgraphnet as mgn
+
+NAME = "meshgraphnet"
+FAMILY = "gnn"
+
+D_EDGE_FEAT = 8
+
+
+def full_config(d_in: int = 128):
+    return mgn.MeshGraphNetConfig(name=NAME, n_layers=15, d_hidden=128,
+                                  mlp_layers=2, d_in_node=d_in,
+                                  d_in_edge=D_EDGE_FEAT, d_out=3)
+
+
+def smoke_config():
+    return mgn.MeshGraphNetConfig(name=NAME + "-smoke", n_layers=3,
+                                  d_hidden=16, d_in_node=12,
+                                  d_in_edge=D_EDGE_FEAT, d_out=3)
+
+
+def make_batch(cfg, dims, abstract: bool, seed: int = 0):
+    n, e = dims["n"], dims["e"]
+    batch = gc.graph_arrays(dims, abstract, seed)
+    key = jax.random.PRNGKey(seed + 1)
+    ks = jax.random.split(key, 3)
+    batch.pop("deg")
+    batch["node_feat"] = gc.abstract_or_random((n, cfg.d_in_node), jnp.float32,
+                                               abstract, ks[0])
+    batch["edge_feat"] = gc.abstract_or_random((e, cfg.d_in_edge), jnp.float32,
+                                               abstract, ks[1])
+    batch["targets"] = gc.abstract_or_random((n, cfg.d_out), jnp.float32,
+                                             abstract, ks[2])
+    return batch
+
+
+def model_flops(cfg, dims) -> float:
+    n, e, d = dims["n"], dims["e"], cfg.d_hidden
+    per_layer = 2 * e * (3 * d * d + d * d) + 2 * n * (2 * d * d + d * d)
+    enc = 2 * n * cfg.d_in_node * d + 2 * e * cfg.d_in_edge * d
+    dec = 2 * n * (d * d + d * cfg.d_out)
+    return cfg.n_layers * per_layer + enc + dec
+
+
+def cells():
+    return gc.gnn_cells()
+
+
+def build(shape: str, multi_pod: bool):
+    dims = gc.GNN_SHAPES[shape]
+    cfg = full_config(d_in=dims["d_feat"])
+    return gc.build_gnn_plan(cfg, mgn.init_params, mgn.loss_fn, make_batch,
+                             shape, multi_pod, model_flops)
+
+
+def smoke_run(seed: int = 0):
+    return gc.run_gnn_smoke(smoke_config(), mgn.init_params, mgn.loss_fn,
+                            make_batch, seed)

@@ -1,0 +1,57 @@
+"""pna [arXiv:2004.05718]: 4L, d=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import gnn_common as gc
+from repro.models.gnn import pna
+
+NAME = "pna"
+FAMILY = "gnn"
+
+
+def full_config(d_in: int = 128):
+    return pna.PNAConfig(name=NAME, n_layers=4, d_hidden=75, d_in=d_in,
+                         d_out=8)
+
+
+def smoke_config():
+    return pna.PNAConfig(name=NAME + "-smoke", n_layers=2, d_hidden=12,
+                         d_in=12, d_out=4)
+
+
+def make_batch(cfg, dims, abstract: bool, seed: int = 0):
+    n = dims["n"]
+    batch = gc.graph_arrays(dims, abstract, seed)
+    key = jax.random.PRNGKey(seed + 1)
+    ks = jax.random.split(key, 2)
+    batch["node_feat"] = gc.abstract_or_random((n, cfg.d_in), jnp.float32,
+                                               abstract, ks[0])
+    batch["targets"] = gc.abstract_or_random((n, cfg.d_out), jnp.float32,
+                                             abstract, ks[1])
+    return batch
+
+
+def model_flops(cfg, dims) -> float:
+    n, e, d = dims["n"], dims["e"], cfg.d_hidden
+    per_layer = 2 * e * (2 * d * d + d * d) + 2 * n * (13 * d * d + d * d)
+    return (cfg.n_layers * per_layer + 2 * n * cfg.d_in * d
+            + 2 * n * (d * d + d * cfg.d_out))
+
+
+def cells():
+    return gc.gnn_cells()
+
+
+def build(shape: str, multi_pod: bool):
+    dims = gc.GNN_SHAPES[shape]
+    cfg = full_config(d_in=dims["d_feat"])
+    return gc.build_gnn_plan(cfg, pna.init_params, pna.loss_fn, make_batch,
+                             shape, multi_pod, model_flops)
+
+
+def smoke_run(seed: int = 0):
+    return gc.run_gnn_smoke(smoke_config(), pna.init_params, pna.loss_fn,
+                            make_batch, seed)

@@ -1,0 +1,47 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3 family]: MoE decoder, 94L x d4096,
+64Q/4KV heads, per-expert d_ff 1536, 128 experts top-8, vocab 151936.
+The largest assigned config (~235B total / ~22B active params): AdamW
+moments run in bf16 and training uses deep microbatching (DESIGN.md §5)."""
+from repro.configs.lm_common import build_lm_plan, lm_cells, lm_smoke_run
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+from repro.train.optimizer import AdamWConfig
+
+NAME = "qwen3-moe-235b-a22b"
+FAMILY = "lm"
+
+
+def full_config():
+    return TransformerConfig(
+        name=NAME, n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+        d_ff=1536, vocab=151936, rope_theta=1_000_000.0,
+        moe=MoEConfig(n_experts=128, top_k=8))
+
+
+def smoke_config():
+    return TransformerConfig(
+        name=NAME + "-smoke", n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=32, vocab=256, moe=MoEConfig(n_experts=8, top_k=2),
+        compute_dtype="float32", q_chunk=8, k_chunk=8)
+
+
+def cells():
+    from repro.configs.base import Cell
+    # +1 EXTRA cell beyond the 4 assigned: the §Perf-optimized a2a dispatch
+    return lm_cells(full_config()) + [Cell(shape="train_4k_a2a", kind="train", extra=True)]
+
+
+def build(shape: str, multi_pod: bool):
+    import dataclasses as dc
+    opt = AdamWConfig(m_dtype="bfloat16", v_dtype="bfloat16")
+    cfg = full_config()
+    if shape == "train_4k_a2a":
+        # §Perf iteration B: explicit shard_map all-to-all expert dispatch
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, impl="a2a"))
+        shape = "train_4k"
+    return build_lm_plan(cfg, shape, multi_pod, opt_cfg=opt,
+                         num_microbatches=16 if shape == "train_4k" else None)
+
+
+def smoke_run(seed: int = 0):
+    return lm_smoke_run(smoke_config(), seed)

@@ -1,0 +1,29 @@
+"""Core contribution of the paper: CPAA — PageRank via Chebyshev
+Polynomial approximation — plus baselines and the distributed solver."""
+from repro.core.chebyshev import (
+    ChebSchedule,
+    beta,
+    coefficient,
+    coefficients,
+    err_bound,
+    make_schedule,
+    power_rounds_for_tolerance,
+    rounds_for_tolerance,
+    sigma_c,
+)
+from repro.core.pagerank import (
+    PageRankResult,
+    cpaa,
+    cpaa_fixed,
+    forward_push,
+    monte_carlo,
+    power,
+    true_pagerank_dense,
+)
+
+__all__ = [
+    "ChebSchedule", "beta", "coefficient", "coefficients", "err_bound",
+    "make_schedule", "power_rounds_for_tolerance", "rounds_for_tolerance",
+    "sigma_c", "PageRankResult", "cpaa", "cpaa_fixed", "forward_push",
+    "monte_carlo", "power", "true_pagerank_dense",
+]

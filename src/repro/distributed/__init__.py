@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (maybe_shard, lm_param_specs,
+                                        lm_opt_specs, flat_axes)

@@ -1,0 +1,13 @@
+from repro.graph.structure import Graph, BlockEll, build_block_ell, reorder_bfs
+from repro.graph import generators, ops, partition, sampler
+
+__all__ = [
+    "Graph",
+    "BlockEll",
+    "build_block_ell",
+    "reorder_bfs",
+    "generators",
+    "ops",
+    "partition",
+    "sampler",
+]

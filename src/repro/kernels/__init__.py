@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package ships three files:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (chooses interpret mode off-TPU)
+  ref.py    — pure-jnp oracle used by tests and as the CPU fallback
+
+Kernels:
+  bsr_spmm      — block-ELL sparse-matrix x dense-matrix product; the CPAA
+                  SpMV/SpMM inner loop (the paper's only compute hot-spot)
+  cheb_step     — fused Chebyshev update t'' = 2y - t; acc += c_k t''
+  embedding_bag — scalar-prefetch gather + bag-sum (DLRM hot path)
+"""

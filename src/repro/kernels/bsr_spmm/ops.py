@@ -1,0 +1,35 @@
+"""Public wrapper for the block-ELL SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_pallas
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bsr_spmm(block_cols: jax.Array, values: jax.Array, x: jax.Array,
+             use_kernel: bool | None = None,
+             interpret: bool | None = None) -> jax.Array:
+    """y = P @ x for block-ELL P. x may be [n] or [n, BT].
+
+    On TPU the Pallas kernel runs compiled; elsewhere tests exercise it with
+    interpret=True while production CPU paths use the jnp oracle (same
+    numerics, faster than interpreting).
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    x = x.astype(jnp.float32)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        y = bsr_spmm_pallas(block_cols, values, x, interpret=interp)
+    else:
+        y = bsr_spmm_ref(block_cols, values, x)
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the block-ELL SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bsr_spmm_ref(block_cols: jax.Array, values: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """Dense-equivalent result: y[i*B:(i+1)*B] = sum_s values[i,s] @ x[cb(i,s)].
+
+    Vectorized gather formulation (no python loops over data), so it is
+    jit-able and serves as the CPU fallback path too.
+    """
+    n_rb, s_max, blk, _ = values.shape
+    n, bt = x.shape
+    x_blocks = x.reshape(n_rb, blk, bt)          # [n_rb, B, BT]
+    gathered = x_blocks[block_cols]              # [n_rb, S, B, BT]
+    y = jnp.einsum("rsij,rsjb->rib", values, gathered,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(n, bt)

@@ -1,0 +1,1 @@
+from repro.kernels.cheb_step.ops import cheb_step

@@ -1,0 +1,56 @@
+"""Fused Chebyshev-update Pallas kernel.
+
+One CPAA round (paper Algorithm 1 lines 22-25) after the SpMV y = P t' is
+pure vector work:
+
+    t''  = 2 y - t          (three-term recurrence)
+    acc' = acc + c_k * t''  (mass accumulating stage)
+
+Unfused, that is 3 HBM reads + 2 HBM writes of n floats. The fused kernel
+streams (y, t, acc) through VMEM once: 3 reads + 2 writes become one pass
+with both outputs produced per tile — the memory-bound tail of every
+iteration shrinks ~40% (roofline: the update moves 5nB bytes instead of
+8nB with intermediate materialization).
+
+Grid: 1D over row tiles of 8*128 elements (vectors are reshaped to
+[n/128, 128] lanes by the wrapper so the VPU sees aligned 2D tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(y_ref, t_ref, acc_ref, ck_ref, t_out_ref, acc_out_ref):
+    t_next = 2.0 * y_ref[...] - t_ref[...]
+    t_out_ref[...] = t_next
+    acc_out_ref[...] = acc_ref[...] + ck_ref[0] * t_next
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def cheb_step_pallas(y: jax.Array, t: jax.Array, acc: jax.Array,
+                     ck: jax.Array, *, block_rows: int = 256,
+                     interpret: bool = False):
+    """y, t, acc: [R, 128] f32 (wrapper-reshaped); ck: [1] f32 scalar.
+
+    Returns (t_next, acc_next), same shape.
+    """
+    r, lanes = y.shape
+    br = min(block_rows, r)
+    grid = (pl.cdiv(r, br),)
+    spec = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    t_next, acc_next = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM)],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, lanes), jnp.float32),
+                   jax.ShapeDtypeStruct((r, lanes), jnp.float32)],
+        interpret=interpret,
+    )(y, t, acc, ck)
+    return t_next, acc_next

@@ -1,0 +1,41 @@
+"""Public wrapper for the fused Chebyshev update kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cheb_step.cheb_step import cheb_step_pallas
+from repro.kernels.cheb_step.ref import cheb_step_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cheb_step(y: jax.Array, t: jax.Array, acc: jax.Array, ck,
+              use_kernel: bool | None = None,
+              interpret: bool | None = None):
+    """Fused t'' = 2y - t; acc' = acc + ck * t''. Accepts [n] or [n, B]."""
+    ck = jnp.asarray(ck, jnp.float32).reshape((1,))
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return cheb_step_ref(y, t, acc, ck[0])
+    shape = y.shape
+    lanes = 128
+    flat = y.size
+    pad = (-flat) % lanes
+    def to2d(a):
+        a = a.reshape(-1).astype(jnp.float32)
+        if pad:
+            a = jnp.pad(a, (0, pad))
+        return a.reshape(-1, lanes)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    t_next, acc_next = cheb_step_pallas(to2d(y), to2d(t), to2d(acc), ck,
+                                        interpret=interp)
+    def back(a):
+        a = a.reshape(-1)
+        if pad:
+            a = a[:flat]
+        return a.reshape(shape)
+    return back(t_next), back(acc_next)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused Chebyshev update."""
+from __future__ import annotations
+
+import jax
+
+
+def cheb_step_ref(y: jax.Array, t: jax.Array, acc: jax.Array, ck: jax.Array):
+    t_next = 2.0 * y - t
+    return t_next, acc + ck * t_next

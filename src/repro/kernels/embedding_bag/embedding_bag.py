@@ -1,0 +1,60 @@
+"""Embedding-bag Pallas kernel (DLRM hot path).
+
+out[b] = sum_l weights[b, l] * table[ids[b, l]]   (multi-hot bag reduce)
+
+JAX has no native EmbeddingBag; the jnp path is take + segment_sum. On TPU
+the dominant cost is the random-row gather from the (possibly huge) table in
+HBM. The Pallas formulation scalar-prefetches the id matrix so each grid
+step's table row is DMA'd directly by BlockSpec index_map — the gather is
+expressed as the grid, and rows stream through VMEM while the output bag
+tile accumulates in place (revisit over the fastest grid axis l).
+
+Grid: (B, L). Table block: (1, D) at row ids[b, l]. Output block: (1, D) at
+row b, accumulated over l. For production tables D is 64-128 so a row is one
+lane-tile; batch>1 rows per step would need gather support inside the block,
+which TPU BlockSpecs do not express — the (1, D) stream is the canonical
+scalar-prefetch gather idiom and XLA double-buffers the row DMAs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, w_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = pl.program_id(0)
+    out_ref[...] += w_ref[0, 0] * table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(ids: jax.Array, table: jax.Array, weights: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """ids [B, L] int32; table [V, D] f32; weights [B, L] f32 -> [B, D]."""
+    bsz, bag = ids.shape
+    _, dim = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, bag),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda b, l, idx: (idx[b, l], 0)),
+            pl.BlockSpec((1, 1), lambda b, l, idx: (b, l)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda b, l, idx: (b, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )(ids, table, weights)

@@ -1,0 +1,33 @@
+"""Public wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(ids: jax.Array, table: jax.Array,
+                  weights: jax.Array | None = None,
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Bag-sum lookup: out[b] = sum_l w[b,l] * table[ids[b,l]].
+
+    ids [B, L] int32, table [V, D]; weights default to ones (plain multi-hot
+    sum, the DLRM case).
+    """
+    ids = ids.astype(jnp.int32)
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return embedding_bag_ref(ids, table, weights)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return embedding_bag_pallas(ids, table.astype(jnp.float32),
+                                weights.astype(jnp.float32), interpret=interp)

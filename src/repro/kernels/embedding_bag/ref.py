@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for embedding_bag: take + weighted sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(ids: jax.Array, table: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    rows = jnp.take(table, ids, axis=0)          # [B, L, D]
+    return jnp.einsum("bl,bld->bd", weights, rows,
+                      preferred_element_type=jnp.float32)

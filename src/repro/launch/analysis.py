@@ -1,0 +1,102 @@
+"""Compiled-artifact analysis: cost terms, collective-byte parsing, roofline.
+
+This container is CPU-only; the roofline is derived STRUCTURALLY from the
+compiled HLO of the dry-run (per the project methodology):
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 50 GB/s per ICI link)
+
+cost_analysis() FLOPs/bytes are PER-DEVICE on SPMD modules, so `chips`
+divides only the collective sum (which we parse per-device from the HLO).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = f32[4,1024]{1,0} all-gather(%param.1), ...
+_OP_RE = re.compile(
+    r"=\s+(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by kind (per device).
+
+    Tuple-shaped collectives (multi-operand all-reduce) list each member as a
+    separate `kind(...)` match via the tuple elements; the regex captures the
+    first shape — for tuple ops we fall back to summing operand shapes found
+    inside the parens.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-start" in line and "-done" not in line:
+            pass  # async start carries the shape; done repeats it
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        dtype, dims, kind = m.groups()
+        out[kind] += _shape_bytes(dtype, dims)
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclass
+class Roofline:
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_bytes: float           # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_flops_ratio: float   # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(cost: dict, coll: dict, chips: int,
+                   model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(coll[k] for k in _COLLECTIVES))
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_hlo_flops = flops * chips
+    ratio = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    return Roofline(chips=chips, hlo_flops=flops, hlo_bytes=byts,
+                    coll_bytes=cbytes, compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dominant,
+                    model_flops=model_flops, useful_flops_ratio=ratio)

@@ -1,0 +1,95 @@
+"""Training launcher: real training of any --arch on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --smoke --steps 50 --ckpt-dir /tmp/run1
+
+On the CPU container only --smoke (reduced) configs are trainable; on real
+hardware the same entry point drives the full configs: the mesh comes from
+make_elastic_mesh() so the run adapts to the device count (elastic restart:
+point --ckpt-dir at an existing run and it resumes from the latest step).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.launch.mesh import make_elastic_mesh
+from repro.train import checkpoint as ckpt
+from repro.train.data import TokenPipelineConfig, token_batch
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU container)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--straggler-deadline-s", type=float, default=None,
+                    help="log steps exceeding this wall-time (mitigation "
+                         "hook: on real fleets this triggers re-balancing)")
+    args = ap.parse_args(argv)
+
+    mod = get(args.arch)
+    if mod.FAMILY != "lm":
+        raise SystemExit("launch.train drives LM archs; use examples/train_gnn.py "
+                         "for the GNN family")
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+    mesh = make_elastic_mesh()
+    print(f"mesh: {mesh.shape} over {mesh.devices.size} device(s)")
+
+    from repro.models import transformer as tf
+    opt_cfg = AdamWConfig(lr=args.lr)
+    start_step = 0
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, opt_cfg)
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        restored, meta = ckpt.restore(args.ckpt_dir,
+                                      {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        start_step = meta["data_step"] + 1
+        print(f"resumed from step {start_step - 1}")
+
+    step = make_train_step(partial(tf.loss_fn, cfg=cfg), opt_cfg,
+                           num_microbatches=1, donate=False)
+    dcfg = TokenPipelineConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                               global_batch=args.global_batch)
+    pending = None
+    for i in range(start_step, start_step + args.steps):
+        t0 = time.perf_counter()
+        params, opt, metrics = step(params, opt, token_batch(dcfg, i))
+        dt = time.perf_counter() - t0
+        if args.straggler_deadline_s and dt > args.straggler_deadline_s:
+            print(f"[straggler] step {i} took {dt:.2f}s > deadline")
+        if i % 10 == 0:
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"{dt * 1e3:.0f}ms")
+        if args.ckpt_dir and i and i % args.ckpt_every == 0:
+            if pending:
+                pending.join()
+            pending = ckpt.save(args.ckpt_dir, i,
+                                {"params": params, "opt": opt},
+                                metadata={"data_step": i}, async_=True)
+    if pending:
+        pending.join()
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, start_step + args.steps - 1,
+                  {"params": params, "opt": opt},
+                  metadata={"data_step": start_step + args.steps - 1})
+        ckpt.prune(args.ckpt_dir, keep=3)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

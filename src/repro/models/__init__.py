@@ -1,0 +1,7 @@
+"""Architecture zoo: LM transformers (dense + MoE), GNNs, DLRM.
+
+Models are hand-rolled param pytrees (nested dicts of jax arrays) + pure
+apply functions — no flax/haiku dependency. Layer weights are stacked along
+a leading L axis and consumed with jax.lax.scan so HLO size stays constant
+in depth (essential for the 94-layer dry-runs).
+"""

@@ -1,0 +1,77 @@
+"""Shared GNN machinery: MLP blocks, interaction-network layers, batching.
+
+All message passing is expressed as gather (x[senders]) + segment_sum over
+receivers — the JAX-native SpMM formulation shared with the CPAA solver
+(DESIGN.md: the paper's distributed SpMM is the GNN substrate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import layer_norm, mlp_apply, mlp_init
+
+
+def lnmlp_init(key, dims, dtype=jnp.float32):
+    """MLP + final LayerNorm (MeshGraphNet/GraphCast convention)."""
+    k1, _ = jax.random.split(key)
+    return {
+        "mlp": mlp_init(k1, dims, dtype),
+        "ln_g": jnp.ones((dims[-1],), dtype),
+        "ln_b": jnp.zeros((dims[-1],), dtype),
+    }
+
+
+def lnmlp_apply(p, x):
+    return layer_norm(mlp_apply(p["mlp"], x, act=jax.nn.silu), p["ln_g"], p["ln_b"])
+
+
+def interaction_init(key, d_node: int, d_edge: int, d_hidden: int,
+                     mlp_layers: int = 2, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    e_dims = (d_edge + 2 * d_node,) + (d_hidden,) * (mlp_layers - 1) + (d_edge,)
+    n_dims = (d_node + d_edge,) + (d_hidden,) * (mlp_layers - 1) + (d_node,)
+    return {"edge": lnmlp_init(k1, e_dims, dtype),
+            "node": lnmlp_init(k2, n_dims, dtype)}
+
+
+def interaction_apply(p, h, e, senders, receivers, n_nodes: int,
+                      aggregator: str = "sum"):
+    """One residual interaction-network step (MeshGraphNet Eq. 1-2).
+
+    h: [N, d_node]; e: [E, d_edge]; senders/receivers: [E] int32.
+    """
+    from repro.distributed.sharding import shard_activation
+    h = shard_activation(h, "flat", None)
+    e = shard_activation(e, "flat", None)
+    msg_in = shard_activation(
+        jnp.concatenate([e, h[senders], h[receivers]], axis=-1), "flat", None)
+    e_new = e + lnmlp_apply(p["edge"], msg_in)
+    if aggregator == "sum":
+        agg = jax.ops.segment_sum(e_new, receivers, num_segments=n_nodes)
+    elif aggregator == "mean":
+        s = jax.ops.segment_sum(e_new, receivers, num_segments=n_nodes)
+        c = jax.ops.segment_sum(jnp.ones_like(receivers, e.dtype), receivers,
+                                num_segments=n_nodes)
+        agg = s / jnp.maximum(c, 1.0)[:, None]
+    else:
+        raise ValueError(aggregator)
+    h_new = h + lnmlp_apply(p["node"], jnp.concatenate([h, agg], axis=-1))
+    return h_new, e_new
+
+
+def segment_std(x, seg, n, eps=1e-5):
+    cnt = jnp.maximum(jax.ops.segment_sum(jnp.ones_like(seg, x.dtype), seg,
+                                          num_segments=n), 1.0)[:, None]
+    mu = jax.ops.segment_sum(x, seg, num_segments=n) / cnt
+    var = jax.ops.segment_sum(jnp.square(x), seg, num_segments=n) / cnt \
+        - jnp.square(mu)
+    return jnp.sqrt(jnp.maximum(var, 0.0) + eps)
+
+
+def mse_loss(pred, target, mask=None):
+    se = jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32))
+    if mask is not None:
+        se = se * mask[:, None]
+        return jnp.sum(se) / (jnp.sum(mask) * se.shape[-1] + 1e-9)
+    return jnp.mean(se)

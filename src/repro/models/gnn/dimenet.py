@@ -1,0 +1,161 @@
+"""DimeNet [arXiv:2003.03123] (with the DimeNet++ down-projected bilinear
+block [arXiv:2011.14115]): directional message passing over edge embeddings
+with radial (RBF) and spherical (SBF) bases evaluated on distances and
+triplet angles.
+
+The triplet list (edge k->j feeding edge j->i) is built host-side and capped
+at `max_triplets_per_edge` — on the assigned non-molecular graphs the full
+O(sum deg^2) triplet set is intractable (DESIGN.md §4). The basis functions
+use sinusoidal radial / Chebyshev angular forms (structurally equivalent to
+the Bessel bases; exact Bessel roots need scipy, unavailable offline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import mse_loss
+from repro.models.layers import mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_in: int = 16
+    cutoff: float = 5.0
+    max_triplets_per_edge: int = 8
+    scan_unroll: bool = False
+
+
+def radial_basis(d, n_radial: int, cutoff: float):
+    """sin(n pi d / c) / d envelope basis. d: [E] -> [E, n_radial]."""
+    dn = jnp.clip(d, 1e-3, cutoff)[:, None] / cutoff
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    env = 1.0 - dn ** 2
+    return env * jnp.sin(jnp.pi * n * dn) / dn
+
+
+def spherical_basis(d, angle, n_spherical: int, n_radial: int, cutoff: float):
+    """Outer product of radial basis and Chebyshev angular basis.
+    d, angle: [T] -> [T, n_spherical * n_radial]."""
+    rb = radial_basis(d, n_radial, cutoff)                     # [T, R]
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    ab = jnp.cos(l[None, :] * angle[:, None])                  # [T, S]
+    return (rb[:, None, :] * ab[:, :, None]).reshape(d.shape[0], -1)
+
+
+def init_params(key, cfg: DimeNetConfig):
+    d = cfg.d_hidden
+    nsb = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[i], 6)
+        blocks.append({
+            "w_rbf": mlp_init(kk[0], (cfg.n_radial, d), bias=False),
+            "w_sbf": mlp_init(kk[1], (nsb, cfg.n_bilinear), bias=False),
+            "down": mlp_init(kk[2], (d, cfg.n_bilinear), bias=False),
+            "up": mlp_init(kk[3], (cfg.n_bilinear, d), bias=False),
+            "mlp": mlp_init(kk[4], (d, d, d)),
+            "out": mlp_init(kk[5], (d, d)),
+        })
+    return {
+        "emb_edge": mlp_init(ks[-3], (2 * cfg.d_in + cfg.n_radial, d, d)),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "dec": mlp_init(ks[-2], (d, d, 1)),
+    }
+
+
+def forward(params, batch, cfg: DimeNetConfig):
+    """batch: node_feat [N, d_in]; senders/receivers [E]; positions [N, 3];
+    t_kj, t_ji [T] triplet edge indices (message k->j feeds edge j->i);
+    t_mask [T]. Returns per-node scalar predictions [N, 1]."""
+    snd, rcv = batch["senders"], batch["receivers"]
+    pos = batch["positions"]
+    n = batch["node_feat"].shape[0]
+
+    vec = pos[rcv] - pos[snd]
+    dist = jnp.linalg.norm(vec + 1e-9, axis=-1)                # [E]
+    rbf = radial_basis(dist, cfg.n_radial, cfg.cutoff)         # [E, R]
+
+    # triplet angle between edge kj and edge ji
+    t_kj, t_ji = batch["t_kj"], batch["t_ji"]
+    v1 = vec[t_kj]
+    v2 = -vec[t_ji]
+    cosang = jnp.sum(v1 * v2, -1) / (
+        jnp.linalg.norm(v1 + 1e-9, -1) * jnp.linalg.norm(v2 + 1e-9, -1))
+    angle = jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6))
+    sbf = spherical_basis(dist[t_kj], angle, cfg.n_spherical,
+                          cfg.n_radial, cfg.cutoff)            # [T, S*R]
+    t_mask = batch["t_mask"][:, None]
+
+    x = mlp_apply(params["emb_edge"],
+                  jnp.concatenate([batch["node_feat"][snd],
+                                   batch["node_feat"][rcv], rbf], -1),
+                  act=jax.nn.silu, final_act=True)             # [E, d]
+
+    n_edges = snd.shape[0]
+    out_sum = jnp.zeros((n, cfg.d_hidden))
+
+    def body(carry, bp):
+        x, out_sum = carry
+        g = mlp_apply(bp["w_rbf"], rbf)                        # [E, d]
+        x_rbf = x * g
+        # directional message: down-project, modulate by SBF, re-aggregate
+        m_kj = mlp_apply(bp["down"], x_rbf)[t_kj]              # [T, nbi]
+        m_kj = m_kj * mlp_apply(bp["w_sbf"], sbf) * t_mask     # [T, nbi]
+        agg = jax.ops.segment_sum(m_kj, t_ji, num_segments=n_edges)
+        x_new = x + mlp_apply(bp["mlp"], mlp_apply(bp["up"], agg),
+                              act=jax.nn.silu, final_act=True)
+        out_sum = out_sum + jax.ops.segment_sum(
+            mlp_apply(bp["out"], x_new), rcv, num_segments=n)
+        return (x_new, out_sum), 0.0
+
+    (x, out_sum), _ = jax.lax.scan(jax.checkpoint(body), (x, out_sum), params["blocks"],
+                                   unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    return mlp_apply(params["dec"], out_sum, act=jax.nn.silu)
+
+
+def loss_fn(params, batch, cfg: DimeNetConfig):
+    pred = forward(params, batch, cfg)
+    return mse_loss(pred, batch["targets"], batch.get("node_mask"))
+
+
+def build_triplets(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
+                   max_per_edge: int = 8, seed: int = 0):
+    """Host-side triplet list: for edge e1 = (j -> i), pick up to
+    max_per_edge incoming edges e0 = (k -> j), k != i.
+    Returns (t_kj, t_ji, t_mask) arrays of length E * max_per_edge."""
+    rng = np.random.default_rng(seed)
+    n_edges = senders.shape[0]
+    # incoming edge lists per node
+    order = np.argsort(receivers, kind="stable")
+    sorted_e = order
+    counts = np.bincount(receivers, minlength=n_nodes)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    t_kj = np.zeros(n_edges * max_per_edge, np.int32)
+    t_ji = np.repeat(np.arange(n_edges, dtype=np.int32), max_per_edge)
+    t_mask = np.zeros(n_edges * max_per_edge, np.float32)
+    for e1 in range(n_edges):
+        j, i = senders[e1], receivers[e1]
+        beg, cnt = starts[j], counts[j]
+        if cnt == 0:
+            continue
+        incoming = sorted_e[beg:beg + cnt]
+        incoming = incoming[senders[incoming] != i]
+        if incoming.size == 0:
+            continue
+        take = min(max_per_edge, incoming.size)
+        pick = incoming if incoming.size <= max_per_edge else \
+            rng.choice(incoming, size=take, replace=False)
+        t_kj[e1 * max_per_edge: e1 * max_per_edge + take] = pick
+        t_mask[e1 * max_per_edge: e1 * max_per_edge + take] = 1.0
+    return t_kj, t_ji, t_mask

@@ -1,0 +1,65 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode on a mesh graph.
+
+15 interaction-network layers, d=128, sum aggregation, 2-layer MLPs with
+LayerNorm, residual node+edge updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (interaction_apply, interaction_init,
+                                     lnmlp_apply, lnmlp_init, mse_loss)
+from repro.models.layers import mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_in_node: int = 16
+    d_in_edge: int = 8
+    d_out: int = 8
+    aggregator: str = "sum"
+    scan_unroll: bool = False
+
+
+def init_params(key, cfg: MeshGraphNetConfig):
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    d = cfg.d_hidden
+    hid = (d,) * cfg.mlp_layers
+    layers = [interaction_init(ks[i], d, d, d, cfg.mlp_layers)
+              for i in range(cfg.n_layers)]
+    return {
+        "enc_node": lnmlp_init(ks[-4], (cfg.d_in_node,) + hid),
+        "enc_edge": lnmlp_init(ks[-3], (cfg.d_in_edge,) + hid),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "dec": mlp_init(ks[-2], hid + (cfg.d_out,)),
+    }
+
+
+def forward(params, batch, cfg: MeshGraphNetConfig):
+    """batch: node_feat [N, d_in_node], edge_feat [E, d_in_edge],
+    senders/receivers [E]."""
+    n = batch["node_feat"].shape[0]
+    h = lnmlp_apply(params["enc_node"], batch["node_feat"])
+    e = lnmlp_apply(params["enc_edge"], batch["edge_feat"])
+    snd, rcv = batch["senders"], batch["receivers"]
+
+    def body(carry, lp):
+        h, e = carry
+        h, e = interaction_apply(lp, h, e, snd, rcv, n, cfg.aggregator)
+        return (h, e), 0.0
+
+    (h, e), _ = jax.lax.scan(jax.checkpoint(body), (h, e), params["layers"],
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp_apply(params["dec"], h)
+
+
+def loss_fn(params, batch, cfg: MeshGraphNetConfig):
+    pred = forward(params, batch, cfg)
+    return mse_loss(pred, batch["targets"], batch.get("node_mask"))

@@ -1,0 +1,198 @@
+"""Shared neural-net building blocks (pure functions + init helpers)."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- init ----
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32, bias: bool = True):
+    """[{'w': [d_i, d_{i+1}], 'b': [d_{i+1}]}] stack as list of dicts."""
+    layers = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, d_in, d_out in zip(keys, dims[:-1], dims[1:]):
+        p = {"w": dense_init(k, d_in, d_out, dtype)}
+        if bias:
+            p["b"] = jnp.zeros((d_out,), dtype)
+        layers.append(p)
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    n = len(layers)
+    for i, p in enumerate(layers):
+        x = x @ p["w"]
+        if "b" in p:
+            x = x + p["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ----------------------------------------------------------------- norms ---
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_freqs(d_head: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0):
+    """x: [..., S, H, Dh]; positions: [..., S] int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, S, Hkv, Dh] -> [B, S, Hkv*groups, Dh] (GQA head sharing)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int | None = None,
+                      q_chunk: int = 512, k_chunk: int = 512,
+                      q_offset: int = 0, unroll: bool = False) -> jax.Array:
+    """Memory-efficient attention via online softmax over KV chunks.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Sk, Hkv, Dh] with H % Hkv == 0.
+    Never materializes the full [Sq, Sk] score matrix — scores exist one
+    (q_chunk, k_chunk) tile at a time (FlashAttention dataflow expressed in
+    lax.scan; on TPU XLA fuses the inner tile into MXU-friendly loops).
+    window: sliding-window size (SWA); None = full attention.
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    groups = h // hkv
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = 1.0 / math.sqrt(dh)
+
+    q_pad = (-sq) % q_chunk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    k_pad = (-sk) % k_chunk
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    n_q, n_k = q.shape[1] // q_chunk, k.shape[1] // k_chunk
+
+    q = q.reshape(b, n_q, q_chunk, h, dh).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qc,dh]
+    k = k.reshape(b, n_k, k_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    v = v.reshape(b, n_k, k_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    # pin batch->data axes and heads->model axis so score tiles stay sharded
+    from repro.distributed.sharding import shard_activation
+    q = shard_activation(q, None, "batch", "tp", None, None)
+    k = shard_activation(k, None, "batch", "tp", None, None)
+    v = shard_activation(v, None, "batch", "tp", None, None)
+
+    q_pos = q_offset + jnp.arange(n_q * q_chunk).reshape(n_q, q_chunk)
+    k_pos = jnp.arange(n_k * k_chunk).reshape(n_k, k_chunk)
+    neg = jnp.float32(-1e30)
+
+    def q_block(qi, q_tile):
+        qp = q_pos[qi]                                   # [qc]
+
+        def kv_step(carry, inputs):
+            m, l, o = carry
+            k_tile, v_tile, kp = inputs
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_tile, k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            mask &= (kp < sk)[None, :]                   # kv padding
+            s = jnp.where(mask[None, None], s, neg)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, h, q_chunk), neg, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        # remat each KV tile: backward recomputes the (qc, kc) score tile
+        # instead of saving it (FlashAttention backward dataflow)
+        (m, l, o), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, o0),
+                                    (k, v, k_pos),
+                                    unroll=n_k if unroll else 1)
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    _, out = jax.lax.scan(
+        lambda _, args: (None, q_block(*args)), None,
+        (jnp.arange(n_q), q), unroll=n_q if unroll else 1)  # [nq,B,H,qc,dh]
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, n_q * q_chunk, h, dh)
+    return out[:, :sq].astype(v.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array | int,
+                     window: int | None = None) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: [B, 1, H, Dh]; caches: [B, S, Hkv, Dh]; cache_len: valid prefix length
+    (scalar or [B]); window: sliding-window size (positions older than
+    cache_len - window are masked). Memory-bound: one pass over the cache.
+    When the cache S axis is sharded over "model" (lm_cache_spec), XLA lowers
+    the softmax + contraction to sequence-parallel partials with all-reduce
+    combines — flash-decoding split-K on the mesh.
+    """
+    b, _, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    groups = h // hkv
+    qg = q.reshape(b, 1, hkv, groups, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    clen = jnp.asarray(cache_len).reshape(-1, 1)
+    valid = pos[None, :] < clen                                   # [B, S]
+    if window is not None:
+        valid &= pos[None, :] >= clen - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(v_cache.dtype)

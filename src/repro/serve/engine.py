@@ -1,0 +1,156 @@
+"""Batched LM serving engine: continuous batching over a fixed-slot KV cache.
+
+A minimal production pattern: `max_batch` cache slots; incoming requests
+claim free slots (prefill writes their KV prefix), every engine tick decodes
+one token for all active slots in a single batched decode_step, finished
+requests free their slots. Per-slot lengths drive the attention masks, so
+ragged batches decode together (the cache_len argument is per-slot).
+
+This models the decode_32k / long_500k serving shapes end-to-end on CPU with
+the reduced configs (tests/test_serve.py) and is the template the dry-run
+serve cells lower.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.models.layers import apply_rope, decode_attention, rms_norm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: tf.TransformerConfig, max_batch: int,
+                 max_len: int, greedy: bool = True, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.kv = tf.make_kv_cache(cfg, max_batch, max_len)
+        self.lengths = np.zeros(max_batch, np.int32)
+        self.budget = np.zeros(max_batch, np.int32)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(partial(self._decode_impl, cfg=cfg))
+        self._prefill_one = jax.jit(partial(self._prefill_impl, cfg=cfg))
+
+    # --- jitted cores ------------------------------------------------------
+    @staticmethod
+    def _prefill_impl(params, tokens, kv, slot, cfg):
+        """Prefill one request into cache slot `slot`."""
+        logits, _, kvs = tf.forward(params, tokens, cfg, return_kv=True)
+        k_new, v_new = kvs  # [L, 1, S, Hkv, Dh]
+        k_cache, v_cache = kv
+        s = tokens.shape[1]
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0, 0))
+        return logits[:, -1], (k_cache, v_cache)
+
+    @staticmethod
+    def _decode_impl(params, tokens, kv, lengths, cfg):
+        """Batched one-token decode with PER-SLOT cache lengths."""
+        cp = tf._cast(params, cfg.cdtype)
+        x = cp["embed"][tokens]                       # [B, 1, D]
+        positions = lengths[:, None]
+
+        def body(carry, inputs):
+            x, = carry
+            lp, kv_l = inputs
+            b, s, d = x.shape
+            h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            xn = rms_norm(x, lp["ln1"])
+            q = xn @ lp["wq"]; k = xn @ lp["wk"]; v = xn @ lp["wv"]
+            if cfg.qkv_bias:
+                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+            q = apply_rope(q.reshape(b, 1, h, hd), positions, cfg.rope_theta)
+            k = apply_rope(k.reshape(b, 1, hkv, hd), positions, cfg.rope_theta)
+            v = v.reshape(b, 1, hkv, hd)
+            k_cache, v_cache = kv_l
+            # per-slot scatter at each slot's own length
+            idx = lengths                                            # [B]
+            bidx = jnp.arange(b)
+            k_cache = k_cache.at[bidx, idx].set(k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[bidx, idx].set(v[:, 0].astype(v_cache.dtype))
+            att = decode_attention(q, k_cache, v_cache, lengths + 1,
+                                   window=cfg.sliding_window)
+            x = x + att.reshape(b, 1, h * hd) @ lp["wo"]
+            xn = rms_norm(x, lp["ln2"])
+            if cfg.moe:
+                from repro.models.moe import moe_apply
+                y, _ = moe_apply(lp["moe"], xn.reshape(b, d), cfg.moe)
+                x = x + y.reshape(b, 1, d)
+            else:
+                x = x + (jax.nn.silu(xn @ lp["w1"]) * (xn @ lp["w3"])) @ lp["w2"]
+            return (x,), (k_cache, v_cache)
+
+        (x,), new_kv = jax.lax.scan(body, (x,), (cp["layers"], kv))
+        x = rms_norm(x, cp["final_ln"])
+        logits = (x[:, 0] @ cp["lm_head"]).astype(jnp.float32)
+        return logits, new_kv
+
+    # --- engine loop -------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None:
+                s = len(req.prompt)
+                assert s + req.max_new_tokens <= self.max_len
+                logits, self.kv = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt)[None, :], self.kv,
+                    slot)
+                self.slot_req[slot] = req
+                self.lengths[slot] = s
+                self.budget[slot] = req.max_new_tokens
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                return True
+        return False
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def tick(self):
+        """One decode step for every active slot."""
+        if self.active() == 0:
+            return
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.out_tokens:
+                last[slot, 0] = req.out_tokens[-1]
+        logits, self.kv = self._decode(self.params, jnp.asarray(last), self.kv,
+                                       jnp.asarray(self.lengths))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.lengths[slot] += 1
+            self.budget[slot] -= 1
+            req.out_tokens.append(int(nxt[slot]))
+            if self.budget[slot] <= 0 or self.lengths[slot] + 1 >= self.max_len:
+                req.done = True
+                self.slot_req[slot] = None
+
+    def run_until_drained(self, requests: list[Request], max_ticks: int = 10_000):
+        pending = list(requests)
+        while pending or self.active():
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.tick()
+            max_ticks -= 1
+            if max_ticks <= 0:
+                raise RuntimeError("serve loop did not drain")

@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+Cross-pod gradient all-reduce is the dominant multi-pod collective for the
+dense LMs. Compressing gradients to int8 with per-tensor scales cuts that
+traffic 4x (f32) / 2x (bf16); the quantization error is fed back into the
+next step's gradient (error feedback, a la 1-bit SGD / EF-SGD), which keeps
+SGD convergence guarantees.
+
+Usage inside a shard_map'd gradient exchange:
+    q, scale = compress(g + err)
+    g_hat    = decompress(psum(q), psum-averaged scale ...)
+or, as used in train_loop-level accumulation, purely local:
+    q, scale, err' = ef_compress(g, err); g_hat = decompress(q, scale)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jax.Array, err: jax.Array):
+    """Error-feedback step: quantize (g + err); the residual becomes the new
+    error state. Returns (g_hat, new_err)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = compress(target)
+    g_hat = decompress(q, scale)
+    return g_hat, target - g_hat
+
+
+def ef_compress_tree(grads, err_tree):
+    out = jax.tree.map(ef_compress, grads, err_tree)
+    g_hat = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return g_hat, new_err
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

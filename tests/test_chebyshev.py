@@ -1,0 +1,87 @@
+"""Unit + property tests for the Chebyshev machinery (paper §2.2, §4.2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chebyshev as ch
+
+
+class TestClosedForm:
+    @pytest.mark.parametrize("c", [0.3, 0.5, 0.85, 0.95, 0.99])
+    @pytest.mark.parametrize("k", [0, 1, 2, 3, 7, 15])
+    def test_coefficient_matches_integral(self, c, k):
+        assert ch.coefficient(c, k) == pytest.approx(
+            ch.coefficient_integral(c, k), abs=1e-7)
+
+    def test_paper_c0_c1_c2(self):
+        # paper Proposition 1 proof: c0 = 2/sqrt(1-c^2), explicit c1, c2.
+        c = 0.85
+        s = math.sqrt(1 - c * c)
+        assert ch.coefficient(c, 0) == pytest.approx(2.0 / s)
+        assert ch.coefficient(c, 1) == pytest.approx(2.0 / c * (1 - s) / s)
+        assert ch.coefficient(c, 2) == pytest.approx(
+            2.0 / c**2 * (2 * (1 - s) - c * c) / s)
+
+    @given(st.floats(min_value=0.05, max_value=0.99))
+    @settings(max_examples=50, deadline=None)
+    def test_sigma_equals_beta(self, c):
+        # the paper's Proposition-1 expression simplifies to beta
+        assert ch.sigma_c(c) == pytest.approx(ch.beta(c), rel=1e-9)
+
+    @given(st.floats(min_value=0.05, max_value=0.99))
+    @settings(max_examples=50, deadline=None)
+    def test_recurrence_c_prev_plus_c_next(self, c):
+        # c_{k-1} + c_{k+1} = (2/c) c_k  (Proposition 1 proof)
+        for k in (1, 3, 8):
+            lhs = ch.coefficient(c, k - 1) + ch.coefficient(c, k + 1)
+            assert lhs == pytest.approx(2.0 / c * ch.coefficient(c, k), rel=1e-9)
+
+    @given(st.floats(min_value=0.05, max_value=0.99))
+    @settings(max_examples=50, deadline=None)
+    def test_total_mass_is_f_of_one(self, c):
+        # c0/2 + sum c_k = f(1) = 1/(1-c): mass conservation of the expansion
+        sched = ch.make_schedule(c, tol=1e-14, max_rounds=6000)
+        assert sched.total_mass == pytest.approx(1.0 / (1.0 - c), rel=1e-6)
+
+
+class TestPaperNumbers:
+    def test_sigma_at_085(self):
+        # paper §4.2.1: "When c=0.85, sigma_c = 0.5567"
+        assert ch.sigma_c(0.85) == pytest.approx(0.5567, abs=1e-4)
+
+    def test_convergence_advantage_vs_power(self):
+        # sigma_c / c < 1 for all c in (0,1): CPAA converges faster
+        for c in np.linspace(0.05, 0.99, 30):
+            assert ch.sigma_c(float(c)) < c
+
+    def test_rounds_for_1e3_is_12(self):
+        # paper Table 2: CPAA reaches ERR < 1e-3 in 12 rounds at c=0.85
+        assert ch.rounds_for_tolerance(0.85, 1e-3) == 12
+
+    def test_err_below_1e4_within_20_rounds(self):
+        # paper §4.2.2 / Figure 2
+        assert ch.err_bound(0.85, 20) < 1e-4
+
+    def test_err_monotone_decreasing(self):
+        errs = [ch.err_bound(0.85, m) for m in range(1, 60)]
+        assert all(a > b for a, b in zip(errs, errs[1:]))
+
+
+class TestSchedule:
+    def test_schedule_halves_c0(self):
+        sched = ch.make_schedule(0.85, 1e-6)
+        assert sched.coeffs[0] == pytest.approx(ch.coefficient(0.85, 0) / 2)
+        assert sched.coeffs[1] == pytest.approx(ch.coefficient(0.85, 1))
+
+    def test_schedule_round_bound_is_tight(self):
+        sched = ch.make_schedule(0.85, 1e-6)
+        assert ch.err_bound(0.85, sched.rounds) < 1e-6
+        assert ch.err_bound(0.85, sched.rounds - 1) >= 1e-6
+
+    def test_bad_damping_raises(self):
+        with pytest.raises(ValueError):
+            ch.beta(1.0)
+        with pytest.raises(ValueError):
+            ch.beta(0.0)

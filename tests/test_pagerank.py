@@ -1,0 +1,164 @@
+"""Solver behaviour tests: CPAA vs direct solve, vs baselines; invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cpaa, forward_push, make_schedule, monte_carlo, power,
+                        true_pagerank_dense, err_bound)
+from repro.graph import generators
+from repro.graph.ops import device_graph, spmv, spmm
+from repro.graph.structure import Graph
+
+
+def small_graphs():
+    return [
+        generators.caveman(6, 10, seed=0),
+        generators.tri_mesh(9, 11),
+        generators.powerlaw_ba(120, 3, seed=2),
+        generators.erdos_renyi(150, 8.0, seed=3),
+        generators.kmer_chains(200, seed=4),
+    ]
+
+
+@pytest.mark.parametrize("gi", range(5))
+def test_cpaa_matches_direct_solve(gi):
+    g = small_graphs()[gi]
+    dg = device_graph(g)
+    pi_true = true_pagerank_dense(g, 0.85)
+    res = cpaa(dg, c=0.85, tol=1e-8)
+    err = np.max(np.abs(np.asarray(res.pi, np.float64) - pi_true) / pi_true)
+    assert err < 5e-5, err
+
+
+@pytest.mark.parametrize("c", [0.5, 0.85, 0.95])
+def test_cpaa_matches_power(c):
+    g = generators.tri_mesh(13, 17)
+    dg = device_graph(g)
+    a = cpaa(dg, c=c, tol=1e-9).pi
+    b = power(dg, c=c, tol=1e-12, max_iter=2000).pi
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-9)
+
+
+def test_cpaa_converges_faster_than_forward_push():
+    """The paper's core claim: at equal round budget CPAA has smaller error."""
+    g = generators.tri_mesh(11, 13)
+    dg = device_graph(g)
+    pi_true = true_pagerank_dense(g, 0.85)
+    for rounds in (6, 9, 12):
+        sched = make_schedule(0.85, rounds=rounds)
+        # force exactly `rounds` iterations for both
+        from repro.core.pagerank import cpaa_fixed
+        pi_c, _ = cpaa_fixed(dg, jnp.asarray(sched.coeffs, jnp.float32),
+                             jnp.ones((g.n,), jnp.float32), rounds=rounds)
+        pi_f = forward_push(dg, 0.85, rounds=rounds).pi
+        e_c = np.max(np.abs(np.asarray(pi_c, np.float64) - pi_true) / pi_true)
+        e_f = np.max(np.abs(np.asarray(pi_f, np.float64) - pi_true) / pi_true)
+        assert e_c < e_f, (rounds, e_c, e_f)
+
+
+def test_empirical_error_within_theoretical_bound():
+    """ERR_M (Formula 8) bounds the whole-graph accumulated-mass error."""
+    g = generators.tri_mesh(11, 13)
+    dg = device_graph(g)
+    pi_true = true_pagerank_dense(g, 0.85)
+    from repro.core.pagerank import cpaa_fixed
+    for rounds in (8, 12, 16):
+        sched = make_schedule(0.85, rounds=rounds)
+        pi_c, _ = cpaa_fixed(dg, jnp.asarray(sched.coeffs, jnp.float32),
+                             jnp.ones((g.n,), jnp.float32), rounds=rounds)
+        # mean relative error tracks the global-mass bound; allow 2x slack for
+        # structure (the paper calls the bound "very rough")
+        e = np.mean(np.abs(np.asarray(pi_c, np.float64) - pi_true) / pi_true)
+        assert e < 2.0 * err_bound(0.85, rounds), (rounds, e)
+
+
+def test_batched_personalization_matches_columnwise():
+    g = generators.powerlaw_ba(90, 3, seed=5)
+    dg = device_graph(g)
+    cols = jnp.stack([
+        jnp.ones((g.n,), jnp.float32),
+        jax.nn.one_hot(3, g.n, dtype=jnp.float32) * g.n,
+        jax.nn.one_hot(41, g.n, dtype=jnp.float32) * g.n,
+    ], axis=1)
+    batched = cpaa(dg, 0.85, 1e-8, p=cols).pi
+    for j in range(cols.shape[1]):
+        single = cpaa(dg, 0.85, 1e-8, p=cols[:, j]).pi
+        np.testing.assert_allclose(np.asarray(batched[:, j]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-9)
+
+
+def test_monte_carlo_correlates_on_skewed_graph():
+    g = generators.powerlaw_ba(150, 3, seed=6)
+    dg = device_graph(g)
+    pi_true = true_pagerank_dense(g, 0.85)
+    mc = monte_carlo(dg, walks_per_node=64, max_len=80, seed=1).pi
+    corr = np.corrcoef(np.asarray(mc), pi_true)[0, 1]
+    assert corr > 0.97, corr
+
+
+# ---------- hypothesis property tests over random undirected graphs ----------
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(min_value=8, max_value=60))
+    n_edges = draw(st.integers(min_value=n, max_value=4 * n))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, n_edges)
+    v = rng.integers(0, n, n_edges)
+    return Graph.from_undirected_edges(n, u, v)
+
+
+@given(random_graph())
+@settings(max_examples=25, deadline=None)
+def test_property_spectrum_is_real(g):
+    """Lemma 2: every eigenvalue of P = A D^{-1} is real for undirected G."""
+    n = g.n
+    a = np.zeros((n, n)); a[g.dst, g.src] = 1.0
+    p = a / np.maximum(a.sum(0), 1.0)[None, :]
+    ev = np.linalg.eigvals(p)
+    assert np.max(np.abs(ev.imag)) < 1e-8
+    assert np.max(np.abs(ev.real)) <= 1.0 + 1e-8
+
+
+@given(random_graph())
+@settings(max_examples=25, deadline=None)
+def test_property_mass_conservation(g):
+    """e^T T_k(P) p = e^T p: total mass is invariant (paper §4.1: 'the total
+    mass of the graph is constant at n')."""
+    dg = device_graph(g)
+    x = jnp.ones((g.n,), jnp.float32)
+    t_prev, t_cur = x, spmv(dg, x)
+    for _ in range(6):
+        assert float(jnp.sum(t_cur)) == pytest.approx(float(jnp.sum(x)), rel=1e-4)
+        t_prev, t_cur = t_cur, 2.0 * spmv(dg, t_cur) - t_prev
+
+
+@given(random_graph(), st.floats(min_value=0.2, max_value=0.95))
+@settings(max_examples=25, deadline=None)
+def test_property_pagerank_valid_distribution(g, c):
+    dg = device_graph(g)
+    pi = cpaa(dg, c=c, tol=1e-7).pi
+    pi = np.asarray(pi, np.float64)
+    assert pi.sum() == pytest.approx(1.0, abs=1e-4)
+    assert (pi > 0).all()
+
+
+@given(random_graph())
+@settings(max_examples=15, deadline=None)
+def test_property_cpaa_equals_direct(g):
+    dg = device_graph(g)
+    pi = np.asarray(cpaa(dg, 0.85, 1e-8).pi, np.float64)
+    pi_true = true_pagerank_dense(g, 0.85)
+    assert np.max(np.abs(pi - pi_true)) < 1e-4
+
+
+def test_spmv_spmm_consistency():
+    g = generators.erdos_renyi(100, 6.0, seed=9)
+    dg = device_graph(g)
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n, 8), jnp.float32)
+    ys = jnp.stack([spmv(dg, x[:, j]) for j in range(8)], axis=1)
+    np.testing.assert_allclose(np.asarray(spmm(dg, x)), np.asarray(ys),
+                               rtol=1e-6, atol=1e-6)
