@@ -15,7 +15,7 @@ def _emit(title: str, rows):
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from benchmarks import kernels_bench, paper_tables
+    from benchmarks import kernels_bench, paper_tables, serve_pagerank_bench
 
     _emit("theory_check (paper §4.2 claims)", paper_tables.theory_check())
     _emit("figure1_convergence_rate", paper_tables.fig1_convergence_rate())
@@ -31,6 +31,8 @@ def main() -> None:
               paper_tables.basis_ablation())
         _emit("kernel_spmm_formats", kernels_bench.spmm_formats())
         _emit("kernel_cheb_fused_update", kernels_bench.cheb_fused_update())
+        _emit("ppr_serving_qps_vs_batch",
+              serve_pagerank_bench.qps_vs_batch())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,85 @@
+"""PPR serving throughput: queries/sec vs micro-batch width B.
+
+    PYTHONPATH=src python -m benchmarks.serve_pagerank_bench [--quick]
+
+The batching win this measures: B personalization columns drain through ONE
+cpaa_fixed call (SpMM, B columns per pass) instead of B separate solves
+(SpMV each). The per-round gather/segment-sum index work is amortized over
+the whole batch, so per-query cost drops super-linearly until the column
+block saturates the memory system (on TPU, until the [8, 128] MXU tile is
+full — B=128 is the natural operating point).
+
+Cache capacity is 0 and every query has distinct seeds, so the numbers are
+pure solver throughput, no cache effects.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.graph import generators
+from repro.serve import GraphRegistry, PageRankService, PPRQuery
+
+
+def _make_queries(n: int, n_queries: int, seed: int = 0):
+    """Two-seed sets with a != b (repeat pairs vanishingly rare, and the
+    cache is disabled anyway -> pure solver throughput)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, n, n_queries)
+    off = rng.integers(1, n, n_queries)
+    return [(int(x), int((x + o) % n)) for x, o in zip(a, off)]
+
+
+def qps_vs_batch(batch_sizes=(1, 8, 32, 128), n_queries: int = 256,
+                 rows: int = 100, cols: int = 100, tol: float = 1e-4):
+    g = generators.tri_mesh(rows, cols)
+    out = [("B", "queries", "wall_s", "qps", "us_per_query", "speedup_vs_B1")]
+    base_qps = None
+    for b in batch_sizes:
+        registry = GraphRegistry()
+        registry.register("g", g)
+        svc = PageRankService(registry, max_batch=b, cache_capacity=0,
+                              max_top_k=8)
+        seeds = _make_queries(g.n, n_queries, seed=b)
+        # warm-up: compile every bucket shape the timed run will hit
+        # (full groups of B, plus the remainder group) off the clock
+        warm_sizes = set()
+        if n_queries >= b:
+            warm_sizes.add(b)
+        if n_queries % b:
+            warm_sizes.add(n_queries % b)
+        for size in warm_sizes:
+            for i in range(size):
+                svc.submit(PPRQuery(qid=-1 - i, graph="g",
+                                    seeds=(i % g.n, (i * 7 + 1) % g.n),
+                                    tol=tol, top_k=8))
+            svc.run_until_drained()
+
+        t0 = time.perf_counter()
+        for i, s in enumerate(seeds):
+            svc.submit(PPRQuery(qid=i, graph="g", seeds=s, tol=tol, top_k=8))
+        svc.run_until_drained()
+        dt = time.perf_counter() - t0
+
+        qps = n_queries / dt
+        base_qps = base_qps or qps
+        out.append((b, n_queries, round(dt, 3), round(qps, 1),
+                    round(dt / n_queries * 1e6, 1), round(qps / base_qps, 2)))
+    return out
+
+
+def main():
+    quick = "--quick" in sys.argv
+    n_queries = 64 if quick else 256
+    rows = cols = 60 if quick else 100
+    table = qps_vs_batch(n_queries=n_queries, rows=rows, cols=cols)
+    print("\n## ppr_serving_qps_vs_batch "
+          f"(tri_mesh {rows}x{cols}, {n_queries} distinct queries)")
+    for row in table:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

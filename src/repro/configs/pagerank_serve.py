@@ -1,0 +1,101 @@
+"""pagerank-serve — the online PPR query service as a registered config.
+
+Unlike the dry-run cells (cpaa-pagerank), this config describes a *serving*
+deployment: which graphs are warm in the registry, the (c, tol) operating
+point, the micro-batcher width, and the cache budget. launch/serve.py,
+examples/serve_pagerank.py and benchmarks/serve_pagerank_bench.py all build
+their service through `make_service` so the wiring lives in one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph import generators
+
+NAME = "pagerank-serve"
+FAMILY = "pagerank"
+
+
+@dataclass(frozen=True)
+class PPRServeConfig:
+    # (registry name, generators.PAPER_DATASETS key, scale)
+    graphs: tuple[tuple[str, str, float], ...]
+    c: float = 0.85
+    tol: float = 1e-4
+    max_batch: int = 32
+    cache_capacity: int = 4096
+    max_top_k: int = 16
+
+
+def full_config() -> PPRServeConfig:
+    """Production-shaped point: two warm graphs, MXU-width micro-batches."""
+    return PPRServeConfig(
+        graphs=(("naca", "NACA0015", 1.0), ("kmer", "kmer-V2", 1.0)),
+        max_batch=128, cache_capacity=65536, max_top_k=32)
+
+
+def smoke_config() -> PPRServeConfig:
+    return PPRServeConfig(graphs=(("mesh", "NACA0015", 0.12),),
+                          max_batch=8, cache_capacity=256, max_top_k=8)
+
+
+def serve_config(smoke: bool = False) -> PPRServeConfig:
+    return smoke_config() if smoke else full_config()
+
+
+def make_service(cfg: PPRServeConfig):
+    """Registry with every configured graph warm + the service over it."""
+    from repro.serve.graph_registry import GraphRegistry
+    from repro.serve.pagerank_service import PageRankService
+    reg = GraphRegistry()
+    for name, dataset, scale in cfg.graphs:
+        reg.register(name, generators.paper_dataset(dataset, scale))
+    svc = PageRankService(reg, max_batch=cfg.max_batch,
+                          cache_capacity=cfg.cache_capacity,
+                          max_top_k=cfg.max_top_k)
+    reg.schedule(cfg.c, cfg.tol)  # precompute the coefficient vector
+    return svc
+
+
+def cells():
+    return []  # online serving workload; not a dry-run (arch x shape) cell
+
+
+def build(shape: str, multi_pod: bool):
+    raise NotImplementedError(
+        "pagerank-serve has no dry-run cells; use launch/serve.py")
+
+
+def smoke_run(seed: int = 0):
+    """CPU: tiny mixed query/update workload; service vs dense oracle."""
+    from repro.core.pagerank import true_pagerank_dense
+    cfg = smoke_config()
+    svc = make_service(cfg)
+    name = cfg.graphs[0][0]
+    g = svc.registry.get(name).host
+    rng = np.random.default_rng(seed)
+    from repro.serve.pagerank_service import PPRQuery
+    seeds = [tuple(int(s) for s in rng.choice(g.n, 2, replace=False))
+             for _ in range(5)]
+    for i, s in enumerate(seeds):
+        svc.submit(PPRQuery(qid=i, graph=name, seeds=s, c=cfg.c, tol=cfg.tol,
+                            top_k=4))
+    results = svc.run_until_drained()
+    # oracle check on query 0
+    p = np.zeros(g.n)
+    p[list(seeds[0])] = 1.0 / len(seeds[0])
+    oracle = true_pagerank_dense(g, cfg.c, p=p)
+    top = results[0].indices
+    err = np.max(np.abs(results[0].scores - oracle[top]))
+    # a repeat hits the cache; an update bumps the epoch
+    hit = svc.submit(PPRQuery(qid=99, graph=name, seeds=seeds[0], c=cfg.c,
+                              tol=cfg.tol, top_k=4))
+    epoch = svc.update_graph(name, insert=[(0, g.n - 1)])
+    return {"max_abs_err": jnp.float32(err),
+            "cache_hit": jnp.float32(hit is not None and hit.cached),
+            "epoch": jnp.float32(epoch),
+            "solves": jnp.float32(svc.stats["solves"]),
+            "loss": jnp.float32(0.0)}

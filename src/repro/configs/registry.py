@@ -7,7 +7,8 @@ from __future__ import annotations
 
 from repro.configs import (deepseek_7b, dimenet, dlrm_rm2, granite_moe_3b,
                            graphcast, h2o_danube_1_8b, meshgraphnet,
-                           pagerank_cpaa, pna, qwen2_5_32b, qwen3_moe_235b)
+                           pagerank_cpaa, pagerank_serve, pna, qwen2_5_32b,
+                           qwen3_moe_235b)
 
 ARCHS = {
     "qwen2.5-32b": qwen2_5_32b,
@@ -24,6 +25,7 @@ ARCHS = {
 
 EXTRA_ARCHS = {
     "cpaa-pagerank": pagerank_cpaa,
+    "pagerank-serve": pagerank_serve,
 }
 
 ALL_ARCHS = {**ARCHS, **EXTRA_ARCHS}

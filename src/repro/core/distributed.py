@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.chebyshev import ChebSchedule
+from repro.distributed.sharding import shard_map_compat
 from repro.graph.partition import Partition1D, Partition2D, col_layout_perm
 
 __all__ = [
@@ -109,7 +110,7 @@ def cpaa_distributed_1d(mesh: Mesh, axes, part: Partition1D,
 
     vec_spec = P(axes, None) if batched else P(axes)
     edge_spec = P(axes)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map_compat(
         solve, mesh=mesh,
         in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
         out_specs=vec_spec,
@@ -163,7 +164,9 @@ def cpaa_distributed_2d(mesh: Mesh, row_axis: str, col_axis: str,
         # varies over it (psum_scatter) — promote so the scan carry types
         # match (values stay replicated).
         row_axes = row_axis if isinstance(row_axis, tuple) else (row_axis,)
-        p_col = jax.lax.pcast(p_col, row_axes, to="varying")
+        pcast = getattr(jax.lax, "pcast", None)
+        if pcast is not None:  # older jax (check_rep=False) doesn't track vma
+            p_col = pcast(p_col, row_axes, to="varying")
         t_prev = p_col
         acc = coeffs[0] * t_prev
         t_cur = spmv(p_col, src_local, dst_local, weight)
@@ -186,7 +189,7 @@ def cpaa_distributed_2d(mesh: Mesh, row_axis: str, col_axis: str,
     # check_vma=False: the output IS replicated over row_axis by construction
     # (the final all_gather along row_axis makes every row group identical),
     # but the varying-axis type system can't prove it through psum_scatter.
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map_compat(
         solve, mesh=mesh,
         in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
         out_specs=vec_spec, check_vma=False,

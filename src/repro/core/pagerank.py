@@ -174,13 +174,20 @@ def monte_carlo(dg: DeviceGraph, c: float = 0.85, walks_per_node: int = 16,
     return PageRankResult(pi=pi, iterations=max_len)
 
 
-def true_pagerank_dense(g, c: float = 0.85) -> jnp.ndarray:
-    """O(n^3) direct solve (1-c)(I - cP)^{-1} p — test oracle for small graphs."""
+def true_pagerank_dense(g, c: float = 0.85, p=None) -> jnp.ndarray:
+    """O(n^3) direct solve (1-c)(I - cP)^{-1} p — test oracle for small graphs.
+
+    p: optional [n] or [n, B] personalization (default uniform). Columns are
+    normalized like the solvers' output (each sums to 1).
+    """
     import numpy as np
     n = g.n
     a = np.zeros((n, n), np.float64)
     a[g.dst, g.src] = 1.0
     deg = a.sum(axis=0)
     p_mat = a / np.maximum(deg, 1.0)[None, :]
-    pi = np.linalg.solve(np.eye(n) - c * p_mat, (1.0 - c) * np.ones(n) / n)
-    return pi / pi.sum()
+    if p is None:
+        p = np.ones(n) / n
+    p = np.asarray(p, np.float64)
+    pi = np.linalg.solve(np.eye(n) - c * p_mat, (1.0 - c) * p)
+    return pi / pi.sum(axis=0, keepdims=p.ndim > 1)

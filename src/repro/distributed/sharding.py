@@ -22,6 +22,19 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """jax.shard_map across jax versions: new jax exposes it at top level
+    with `check_vma`; older jax has jax.experimental.shard_map with
+    `check_rep` (same meaning)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
 def flat_axes(multi_pod: bool):
     """All mesh axes, for flattened node/edge sharding (GNN/pagerank)."""
     return ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -32,9 +45,11 @@ def batch_axes(multi_pod: bool):
 
 
 def _current_mesh():
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty:
-        return am
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:  # jax >= 0.5; older jax only has the concrete mesh
+        am = get_am()
+        if am is not None and not am.empty:
+            return am
     try:  # concrete `with mesh:` context (not surfaced by get_abstract_mesh)
         from jax._src import mesh as mesh_lib
         pm = mesh_lib.thread_resources.env.physical_mesh

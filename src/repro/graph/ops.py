@@ -24,16 +24,25 @@ __all__ = [
 
 
 class DeviceGraph:
-    """Device-resident COO graph + precomputed 1/deg (the paper's P)."""
+    """Device-resident COO graph + precomputed 1/deg (the paper's P).
 
-    def __init__(self, n: int, src: jax.Array, dst: jax.Array, inv_deg: jax.Array):
+    `w` is an optional [m] per-edge multiplier. Its only in-tree use is
+    zero-weighted padding edges: the serving registry pads edge arrays up to
+    power-of-two buckets so that edge-update batches keep jit shapes stable
+    (no retrace per update). w=None is the common unpadded case and costs
+    nothing.
+    """
+
+    def __init__(self, n: int, src: jax.Array, dst: jax.Array,
+                 inv_deg: jax.Array, w: jax.Array | None = None):
         self.n = n
         self.src = src
         self.dst = dst
         self.inv_deg = inv_deg
+        self.w = w
 
     def tree_flatten(self):
-        return (self.src, self.dst, self.inv_deg), self.n
+        return (self.src, self.dst, self.inv_deg, self.w), self.n
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -44,25 +53,38 @@ jax.tree_util.register_pytree_node(
     DeviceGraph, DeviceGraph.tree_flatten, DeviceGraph.tree_unflatten)
 
 
-def device_graph(g: Graph, dtype=jnp.float32) -> DeviceGraph:
+def device_graph(g: Graph, dtype=jnp.float32,
+                 pad_edges_to: int | None = None) -> DeviceGraph:
     deg = np.maximum(g.deg, 1).astype(np.float64)
+    src, dst, w = g.src, g.dst, None
+    if pad_edges_to is not None and pad_edges_to > g.m:
+        pad = pad_edges_to - g.m
+        zeros = np.zeros(pad, np.int32)
+        src = np.concatenate([src, zeros])
+        dst = np.concatenate([dst, zeros])
+        w = np.concatenate([np.ones(g.m, np.float64), np.zeros(pad)])
     return DeviceGraph(
         n=g.n,
-        src=jnp.asarray(g.src),
-        dst=jnp.asarray(g.dst),
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
         inv_deg=jnp.asarray((1.0 / deg), dtype),
+        w=None if w is None else jnp.asarray(w, dtype),
     )
 
 
 def spmv(dg: DeviceGraph, x: jax.Array) -> jax.Array:
     """y = P x with P = A D^{-1}: y[dst] += x[src] / deg[src]. x: [n]."""
     contrib = x[dg.src] * dg.inv_deg[dg.src]
+    if dg.w is not None:
+        contrib = contrib * dg.w
     return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
 
 
 def spmm(dg: DeviceGraph, x: jax.Array) -> jax.Array:
     """Batched transition: x [n, B] -> P x [n, B] (multi-source PageRank)."""
     contrib = x[dg.src] * dg.inv_deg[dg.src][:, None]
+    if dg.w is not None:
+        contrib = contrib * dg.w[:, None]
     return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
 
 
@@ -95,5 +117,7 @@ def edge_softmax(dg: DeviceGraph, scores: jax.Array) -> jax.Array:
 
 
 def degree_normalize(dg: DeviceGraph, x: jax.Array, power: float = -0.5) -> jax.Array:
-    """D^power x (GCN-style normalization helper); deg = 1 / inv_deg."""
-    return x * (dg.inv_deg[:, None] ** (-power))
+    """D^power x (GCN-style normalization helper); deg = 1 / inv_deg.
+    x: [n] or [n, d], like spmv/spmm."""
+    scale = dg.inv_deg ** (-power)
+    return x * (scale if x.ndim == 1 else scale[:, None])

@@ -16,11 +16,17 @@ HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link
 
 
+def mesh_kwargs(n_axes: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:  # jax < 0.5 has no explicit-sharding axis types
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))
 
 
 def make_elastic_mesh(n_devices: int | None = None, *, model_parallel: int = 16):
@@ -31,5 +37,4 @@ def make_elastic_mesh(n_devices: int | None = None, *, model_parallel: int = 16)
     mp = min(model_parallel, n)
     while n % mp:
         mp -= 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n // mp, mp), ("data", "model"), **mesh_kwargs(2))

@@ -1,7 +1,11 @@
-"""Serving launcher: batched greedy decoding for any LM --arch.
+"""Serving launcher: batched greedy decoding for any LM --arch, or the
+online Personalized-PageRank query service for the pagerank family.
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
         --smoke --requests 8
+
+    PYTHONPATH=src python -m repro.launch.serve --arch pagerank-serve \
+        --smoke --requests 64 --updates 2
 """
 from __future__ import annotations
 
@@ -12,24 +16,15 @@ import numpy as np
 import jax
 
 from repro.configs import get
-from repro.models import transformer as tf
-from repro.serve.engine import Request, ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--max-new-tokens", type=int, default=8)
-    args = ap.parse_args(argv)
+def serve_lm(mod, args):
+    from repro.models import transformer as tf
+    from repro.serve.engine import Request, ServeEngine
 
-    mod = get(args.arch)
     cfg = mod.smoke_config() if args.smoke else mod.full_config()
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, args.max_batch, args.max_len)
+    engine = ServeEngine(params, cfg, args.max_batch or 4, args.max_len)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -43,6 +38,78 @@ def main(argv=None):
     total = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s)")
+
+
+def serve_pagerank(mod, args):
+    """Mixed query/update workload through the PPR micro-batching service."""
+    from repro.serve.pagerank_service import PPRQuery
+
+    cfg = mod.serve_config(smoke=args.smoke)
+    if args.max_batch:
+        from dataclasses import replace
+        cfg = replace(cfg, max_batch=args.max_batch)
+    svc = mod.make_service(cfg)
+    names = svc.registry.names()
+    rng = np.random.default_rng(0)
+
+    queries = []
+    for i in range(args.requests):
+        name = names[int(rng.integers(0, len(names)))]
+        n = svc.registry.get(name).host.n
+        seeds = tuple(int(s) for s in
+                      rng.choice(n, int(rng.integers(1, 4)), replace=False))
+        queries.append(PPRQuery(qid=i, graph=name, seeds=seeds, c=cfg.c,
+                                tol=cfg.tol, top_k=min(8, cfg.max_top_k)))
+    # ~10% repeats exercise the cache
+    repeats = [PPRQuery(qid=args.requests + j, graph=q.graph, seeds=q.seeds,
+                        c=q.c, tol=q.tol, top_k=q.top_k)
+               for j, q in enumerate(queries[:max(1, args.requests // 10)])]
+
+    t0 = time.perf_counter()
+    for q in queries:
+        svc.submit(q)
+    for u in range(args.updates):
+        name = names[u % len(names)]
+        n = svc.registry.get(name).host.n
+        edge = (int(rng.integers(0, n // 2)), int(rng.integers(n // 2, n)))
+        svc.update_graph(name, insert=[edge])
+    for q in repeats:
+        svc.submit(q)
+    results = svc.run_until_drained()
+    dt = time.perf_counter() - t0
+
+    total = len(results)
+    st = svc.stats
+    print(f"served {total} PPR queries in {dt:.2f}s ({total / dt:.1f} q/s); "
+          f"{st['solves']} batched solves for {st['solved_queries']} queries "
+          f"(avg B={st['solved_queries'] / max(st['solves'], 1):.1f}), "
+          f"{st['cache_hits']} cache hits, {st['updates']} graph updates")
+    print(f"cache: {svc.cache.stats()}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="LM: engine slots (default 4); pagerank: micro-batch "
+                         "width override (default from config)")
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--updates", type=int, default=0,
+                    help="edge-update batches interleaved (pagerank only)")
+    args = ap.parse_args(argv)
+
+    mod = get(args.arch)
+    if hasattr(mod, "serve_config"):   # the online PPR query service
+        serve_pagerank(mod, args)
+    elif getattr(mod, "FAMILY", None) == "lm":
+        serve_lm(mod, args)
+    else:
+        raise SystemExit(
+            f"--arch {args.arch} (family {getattr(mod, 'FAMILY', '?')}) is "
+            f"not servable; use an LM arch or pagerank-serve")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import (apply_rope, chunked_attention, decode_attention,
                                  dense_init, embed_init, rms_norm)
+from repro.distributed.sharding import shard_map_compat
 from repro.models.moe import MoEConfig, moe_apply, moe_capacity, moe_init
 
 
@@ -207,7 +208,7 @@ def _moe_a2a_sharded(mp, x, cfg: TransformerConfig):
         aux = jax.lax.pmean(aux, axes) if dp else jax.lax.pmean(aux, "model")
         return y.reshape(bl, sl, dl), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         fn, mesh=mesh,
         in_specs=(xspec, P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None)),

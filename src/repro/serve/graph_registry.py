@@ -1,0 +1,135 @@
+"""Named, warm graphs for the online PPR query service.
+
+The registry is the serving-side owner of graph state:
+
+  * every graph is registered under a name and kept device-resident
+    (`DeviceGraph`) so queries never pay a host->device transfer;
+  * each registered graph carries an **epoch** counter. Edge-update batches
+    (insert/delete of undirected edges) rebuild the device graph and bump
+    the epoch; result caches key on (name, epoch), so stale entries can
+    never be served after an update;
+  * `ChebSchedule`s are precomputed per (c, tol) — the coefficient vector
+    depends only on the damping factor and tolerance, not on the graph, so
+    one schedule warms every graph at that operating point.
+
+Host-side rebuild cost is O(m log m) (numpy set ops on the canonical
+undirected edge keys); for the mesh-sized graphs this service targets that
+is far below one solve, and it happens off the query path only when an
+update batch arrives. Device edge arrays are padded to power-of-two buckets
+(zero-weight pad edges), so rebuilds keep jit shapes stable: an update only
+retraces the solve when m crosses a bucket boundary, not on every batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.chebyshev import ChebSchedule, make_schedule
+from repro.graph.ops import DeviceGraph, device_graph
+from repro.graph.structure import Graph
+
+__all__ = ["RegisteredGraph", "GraphRegistry"]
+
+
+@dataclass
+class RegisteredGraph:
+    """One serving graph: host copy (for rebuilds), device copy (for solves),
+    and the epoch stamped into every cache key."""
+
+    name: str
+    host: Graph
+    dg: DeviceGraph
+    epoch: int = 0
+
+
+def _undirected_keys(g: Graph) -> np.ndarray:
+    """Canonical int64 keys lo * n + hi of the undirected edge set (each
+    edge once; self loops — the isolated-vertex patch — excluded)."""
+    lo = np.minimum(g.src, g.dst).astype(np.int64)
+    hi = np.maximum(g.src, g.dst).astype(np.int64)
+    keep = lo < hi
+    return np.unique(lo[keep] * g.n + hi[keep])
+
+
+def _edge_bucket(m: int, minimum: int = 1024) -> int:
+    """Smallest power of two >= m (at least `minimum`): the padded device
+    edge-array length. <= 2x memory for shape stability across updates."""
+    b = minimum
+    while b < m:
+        b *= 2
+    return b
+
+
+def _edges_to_keys(n: int, edges) -> np.ndarray:
+    """[(u, v), ...] -> canonical keys; validates vertex ids."""
+    arr = np.asarray(list(edges), np.int64).reshape(-1, 2)
+    if arr.size and (arr.min() < 0 or arr.max() >= n):
+        raise ValueError(f"edge endpoint out of range [0, {n})")
+    if np.any(arr[:, 0] == arr[:, 1]):
+        raise ValueError("self loops are not valid undirected edges")
+    lo = np.minimum(arr[:, 0], arr[:, 1])
+    hi = np.maximum(arr[:, 0], arr[:, 1])
+    return np.unique(lo * n + hi)
+
+
+class GraphRegistry:
+    """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache."""
+
+    def __init__(self, dtype=jnp.float32):
+        self.dtype = dtype
+        self._graphs: dict[str, RegisteredGraph] = {}
+        self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
+
+    # ---- graphs -----------------------------------------------------------
+    def register(self, name: str, g: Graph) -> RegisteredGraph:
+        if name in self._graphs:
+            raise ValueError(f"graph {name!r} already registered")
+        rg = RegisteredGraph(
+            name=name, host=g,
+            dg=device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m)))
+        self._graphs[name] = rg
+        return rg
+
+    def get(self, name: str) -> RegisteredGraph:
+        if name not in self._graphs:
+            raise KeyError(f"unknown graph {name!r}; known: {sorted(self._graphs)}")
+        return self._graphs[name]
+
+    def names(self) -> list[str]:
+        return sorted(self._graphs)
+
+    # ---- dynamic updates --------------------------------------------------
+    def apply_updates(self, name: str, insert=(), delete=()) -> RegisteredGraph:
+        """Apply a batch of undirected edge inserts/deletes.
+
+        Duplicate inserts and deletes of absent edges are no-ops. The vertex
+        set is fixed at registration. Rebuilds the DeviceGraph and bumps the
+        epoch even when the batch is a net no-op — callers treat the epoch
+        as "config version", and a monotone bump is the safe default.
+        """
+        rg = self.get(name)
+        n = rg.host.n
+        keys = _undirected_keys(rg.host)
+        if len(delete):
+            keys = np.setdiff1d(keys, _edges_to_keys(n, delete),
+                                assume_unique=True)
+        if len(insert):
+            keys = np.union1d(keys, _edges_to_keys(n, insert))
+        g_new = Graph.from_undirected_edges(n, keys // n, keys % n)
+        rg.host = g_new
+        rg.dg = device_graph(g_new, self.dtype,
+                             pad_edges_to=_edge_bucket(g_new.m))
+        rg.epoch += 1
+        return rg
+
+    # ---- schedules --------------------------------------------------------
+    def schedule(self, c: float, tol: float) -> tuple[ChebSchedule, jax.Array]:
+        """Precomputed (ChebSchedule, device coeff vector) for (c, tol)."""
+        key = (float(c), float(tol))
+        if key not in self._schedules:
+            sched = make_schedule(c, tol)
+            self._schedules[key] = (sched, jnp.asarray(sched.coeffs, self.dtype))
+        return self._schedules[key]

@@ -1,0 +1,241 @@
+"""Online Personalized-PageRank query service with continuous micro-batching.
+
+The offline CPAA solver is throughput-shaped: its three-term recurrence over
+a personalization matrix [n, B] is one SpMM per round, which is exactly what
+feeds the MXU. This service turns that into an online engine, mirroring the
+slot-based LM `ServeEngine` (continuous batching, fixed shapes, one jitted
+core per tick):
+
+  * queries (graph name, seed set, c, tol, top_k) land in a FIFO queue;
+  * every `tick()` packs the oldest compatible group — same graph and same
+    (c, tol) operating point — into an [n, B] personalization matrix and
+    drains it through ONE jitted `cpaa_fixed` call: B queries cost one
+    batched MXU pass instead of B separate solves;
+  * batch widths are padded up to power-of-two buckets so XLA compiles a
+    handful of shapes once and every later tick reuses them;
+  * results come back as ranked top-k vertex lists (lax.top_k on device),
+    not full [n] vectors — the service answer is "which vertices", and k
+    values instead of n keeps the device->host copy O(k * B);
+  * an LRU cache keyed by (graph, epoch, seeds, c, tol) serves repeats
+    without touching the solver; edge-update batches bump the graph epoch
+    and purge that graph's entries, so staleness is structural, not timed.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pagerank import cpaa_fixed
+from repro.serve.graph_registry import GraphRegistry
+from repro.serve.result_cache import ResultCache
+
+__all__ = ["PPRQuery", "PPRResult", "PageRankService"]
+
+
+@dataclass(frozen=True)
+class PPRQuery:
+    """One personalized-PageRank request: restart mass uniform over `seeds`."""
+
+    qid: int
+    graph: str
+    seeds: tuple[int, ...]
+    c: float = 0.85
+    tol: float = 1e-4
+    top_k: int = 8
+
+    def key(self, epoch: int) -> tuple:
+        return (self.graph, epoch, tuple(sorted(set(self.seeds))),
+                float(self.c), float(self.tol))
+
+
+@dataclass
+class PPRResult:
+    qid: int
+    graph: str
+    epoch: int
+    indices: np.ndarray      # [top_k] int32, ranked by descending score
+    scores: np.ndarray       # [top_k] float32, normalized PPR mass
+    cached: bool = False
+    batch_size: int = 0      # live queries in the solve that produced this
+
+
+@partial(jax.jit, static_argnames=("rounds", "k"))
+def _solve_topk(dg, coeffs: jax.Array, p: jax.Array, rounds: int, k: int):
+    """One micro-batch: [n, B] personalization -> ([B, k] ids, [B, k] mass)."""
+    pi, _ = cpaa_fixed(dg, coeffs, p, rounds=rounds)
+    scores, idx = jax.lax.top_k(pi.T, k)
+    return idx.astype(jnp.int32), scores
+
+
+class PageRankService:
+    """Query queue + micro-batcher + result cache over a GraphRegistry."""
+
+    def __init__(self, registry: GraphRegistry, max_batch: int = 32,
+                 cache_capacity: int = 4096, max_top_k: int = 16):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.registry = registry
+        self.max_batch = max_batch
+        self.max_top_k = max_top_k
+        self.cache = ResultCache(cache_capacity)
+        self._pending: deque[PPRQuery] = deque()
+        self._results: dict[int, PPRResult] = {}
+        # power-of-two batch buckets: bounded set of compiled shapes
+        self._buckets = []
+        b = 1
+        while b < max_batch:
+            self._buckets.append(b)
+            b *= 2
+        self._buckets.append(max_batch)
+        self.stats = {"queries": 0, "cache_hits": 0, "solves": 0,
+                      "solved_queries": 0, "ticks": 0, "padded_columns": 0,
+                      "updates": 0}
+
+    # ---- submission -------------------------------------------------------
+    def submit(self, q: PPRQuery) -> PPRResult | None:
+        """Enqueue a query; returns the result immediately on a cache hit."""
+        if not q.seeds:
+            raise ValueError("query needs at least one seed vertex")
+        rg = self.registry.get(q.graph)
+        if min(q.seeds) < 0 or max(q.seeds) >= rg.host.n:
+            raise ValueError(f"seed out of range [0, {rg.host.n})")
+        if q.top_k > self.max_top_k:
+            raise ValueError(f"top_k {q.top_k} exceeds service max_top_k "
+                             f"{self.max_top_k}")
+        self.stats["queries"] += 1
+        hit = self.cache.get(q.key(rg.epoch))
+        if hit is not None:
+            res = self._materialize(q, rg.epoch, *hit, cached=True)
+            self._results[q.qid] = res
+            self.stats["cache_hits"] += 1
+            return res
+        self._pending.append(q)
+        return None
+
+    def submit_many(self, queries) -> list[PPRResult]:
+        return [r for r in (self.submit(q) for q in queries) if r is not None]
+
+    # ---- graph updates ----------------------------------------------------
+    def update_graph(self, name: str, insert=(), delete=()) -> int:
+        """Apply an edge-update batch; bumps the epoch and drops every cached
+        result for that graph. Returns the new epoch."""
+        rg = self.registry.apply_updates(name, insert=insert, delete=delete)
+        self.cache.invalidate_graph(name)
+        self.stats["updates"] += 1
+        return rg.epoch
+
+    # ---- the micro-batcher ------------------------------------------------
+    def _bucket(self, b: int) -> int:
+        for cap in self._buckets:
+            if b <= cap:
+                return cap
+        return self.max_batch
+
+    def _take_group(self) -> list[PPRQuery]:
+        """Pop up to max_batch queries sharing the head query's
+        (graph, c, tol) — FIFO fairness with opportunistic packing."""
+        head = self._pending[0]
+        gkey = (head.graph, float(head.c), float(head.tol))
+        group, rest = [], deque()
+        while self._pending:
+            q = self._pending.popleft()
+            if len(group) < self.max_batch and \
+                    (q.graph, float(q.c), float(q.tol)) == gkey:
+                group.append(q)
+            else:
+                rest.append(q)
+        self._pending = rest
+        return group
+
+    def tick(self) -> list[PPRResult]:
+        """Drain one micro-batch through a single jitted solve."""
+        if not self._pending:
+            return []
+        self.stats["ticks"] += 1
+        group = self._take_group()
+        rg = self.registry.get(group[0].graph)
+        epoch = rg.epoch
+        out: list[PPRResult] = []
+
+        # a twin query may have populated the cache since submission
+        # (count=False: this query already counted its miss at submit time)
+        live: list[PPRQuery] = []
+        for q in group:
+            hit = self.cache.get(q.key(epoch), count=False)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                out.append(self._materialize(q, epoch, *hit, cached=True))
+            else:
+                live.append(q)
+        if not live:
+            for r in out:
+                self._results[r.qid] = r
+            return out
+
+        sched, coeffs = self.registry.schedule(live[0].c, live[0].tol)
+        n = rg.host.n
+        b_pad = self._bucket(len(live))
+        self.stats["padded_columns"] += b_pad - len(live)
+        p = np.zeros((n, b_pad), np.float32)
+        for j, q in enumerate(live):
+            p[np.asarray(sorted(set(q.seeds)), np.int64), j] = 1.0
+        p[:, len(live):] = 1.0  # pad columns: uniform mass, discarded
+
+        k = min(self.max_top_k, n)
+        idx, scores = _solve_topk(rg.dg, coeffs, jnp.asarray(p),
+                                  rounds=sched.rounds, k=k)
+        idx = np.asarray(idx)
+        scores = np.asarray(scores)
+        self.stats["solves"] += 1
+        self.stats["solved_queries"] += len(live)
+
+        for j, q in enumerate(live):
+            self.cache.put(q.key(epoch), (idx[j], scores[j]))
+            out.append(self._materialize(q, epoch, idx[j], scores[j],
+                                         cached=False, batch_size=len(live)))
+        for r in out:
+            self._results[r.qid] = r
+        return out
+
+    def _materialize(self, q: PPRQuery, epoch: int, idx: np.ndarray,
+                     scores: np.ndarray, cached: bool,
+                     batch_size: int = 0) -> PPRResult:
+        return PPRResult(qid=q.qid, graph=q.graph, epoch=epoch,
+                         indices=idx[:q.top_k].copy(),
+                         scores=scores[:q.top_k].copy(),
+                         cached=cached, batch_size=batch_size)
+
+    # ---- drain loop -------------------------------------------------------
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> dict[int, PPRResult]:
+        """Tick until the queue is empty; returns (and clears) the delivery
+        buffer of results completed since the last drain — including cache
+        hits resolved at submit() time — so a long-running service does not
+        accumulate every result it ever produced."""
+        while self._pending:
+            self.tick()
+            max_ticks -= 1
+            if max_ticks <= 0:
+                raise RuntimeError("PPR serve loop did not drain")
+        out, self._results = self._results, {}
+        return out
+
+    def query(self, graph: str, seeds, c: float = 0.85, tol: float = 1e-4,
+              top_k: int = 8, qid: int | None = None) -> PPRResult:
+        """Synchronous convenience wrapper: submit one query and drain it."""
+        qid = qid if qid is not None else -1 - self.stats["queries"]
+        res = self.submit(PPRQuery(qid=qid, graph=graph,
+                                   seeds=tuple(int(s) for s in seeds),
+                                   c=c, tol=tol, top_k=top_k))
+        if res is not None:
+            self._results.pop(qid, None)  # delivered here, not via drain
+            return res
+        return self.run_until_drained()[qid]

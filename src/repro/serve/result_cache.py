@@ -1,0 +1,67 @@
+"""LRU cache for ranked PPR query results.
+
+Keys are (graph name, graph epoch, seed tuple, c, tol): the epoch makes
+every edge-update batch an implicit cache flush for that graph — a stale
+entry's key can never be constructed again. `invalidate_graph` additionally
+purges the dead entries eagerly so capacity isn't wasted on unreachable
+keys.
+
+Values are (indices, scores) arrays of the service-level max_top_k; queries
+asking for a smaller k slice the cached arrays, so one entry serves every
+top_k <= max_top_k at that operating point.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+__all__ = ["ResultCache"]
+
+
+class ResultCache:
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key, count: bool = True):
+        """Lookup with LRU touch. count=False skips the hit/miss counters —
+        used by the batcher's in-flight dedup re-check so each query moves
+        the stats exactly once (at submit time)."""
+        if key in self._d:
+            self._d.move_to_end(key)
+            if count:
+                self.hits += 1
+            return self._d[key]
+        if count:
+            self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if self.capacity <= 0:
+            return
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate_graph(self, graph: str) -> int:
+        """Drop every entry for `graph` (any epoch). Returns the count."""
+        dead = [k for k in self._d if k[0] == graph]
+        for k in dead:
+            del self._d[k]
+        self.invalidations += len(dead)
+        return len(dead)
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations}

@@ -25,9 +25,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+import zlib
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
 
 _FLAG = "checkpoint-complete"
+
+
+def _make_compress(codec: str):
+    if codec == "zstd":
+        cctx = zstandard.ZstdCompressor(level=3)
+        return cctx.compress
+    return lambda b: zlib.compress(b, 3)
+
+
+def _make_decompress(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("checkpoint was written with zstd but "
+                               "zstandard is not installed")
+        dctx = zstandard.ZstdDecompressor()
+        return dctx.decompress
+    return zlib.decompress
 
 
 def _flatten(tree):
@@ -50,12 +72,13 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree, metadata: dict | None = N
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir()
-        cctx = zstandard.ZstdCompressor(level=3)
+        codec = "zstd" if zstandard is not None else "zlib"
+        compress = _make_compress(codec)
         index = []
         with open(tmp / "data.bin", "wb") as f:
             for i, arr in enumerate(host_leaves):
                 raw = np.ascontiguousarray(arr)
-                comp = cctx.compress(raw.tobytes())
+                comp = compress(raw.tobytes())
                 index.append({"i": i, "shape": list(arr.shape),
                               "dtype": str(arr.dtype), "nbytes": len(comp)})
                 f.write(comp)
@@ -63,6 +86,7 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree, metadata: dict | None = N
             os.fsync(f.fileno())
         with open(tmp / "index.msgpack", "wb") as f:
             f.write(msgpack.packb({
+                "codec": codec,
                 "leaves": index,
                 "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
                 if hasattr(treedef, "serialize_using_proto") else None,
@@ -108,12 +132,12 @@ def restore(ckpt_dir: str | os.PathLike, tree_like, step: int | None = None,
     final = ckpt_dir / f"step_{step:09d}"
     with open(final / "index.msgpack", "rb") as f:
         index = msgpack.unpackb(f.read())
-    dctx = zstandard.ZstdDecompressor()
+    decompress = _make_decompress(index.get("codec", "zstd"))
     arrays = []
     with open(final / "data.bin", "rb") as f:
         for meta in index["leaves"]:
             comp = f.read(meta["nbytes"])
-            raw = dctx.decompress(comp)
+            raw = decompress(comp)
             arrays.append(np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
                           .reshape(meta["shape"]))
     _, treedef = jax.tree_util.tree_flatten(tree_like)

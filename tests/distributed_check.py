@@ -15,6 +15,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import cpaa, make_schedule  # noqa: E402
+from repro.launch.mesh import mesh_kwargs  # noqa: E402
 from repro.core.distributed import (  # noqa: E402
     col_layout_perm, cpaa_distributed_1d, cpaa_distributed_2d,
     pad_personalization, put_partition_1d, put_partition_2d)
@@ -35,8 +36,7 @@ def main():
     g = generators.tri_mesh(23, 31)
     sched = make_schedule(0.85, 1e-8)
     pi_ref = np.asarray(cpaa(device_graph(g), 0.85, schedule=sched).pi, np.float64)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **mesh_kwargs(2))
 
     # ---- 1D over the flattened 8-device mesh
     part = partition_1d(g, 8, lane=8)

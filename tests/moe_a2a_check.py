@@ -14,13 +14,14 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.distributed.sharding import shard_map_compat  # noqa: E402
+from repro.launch.mesh import mesh_kwargs  # noqa: E402
 from repro.models.moe import MoEConfig, moe_apply, moe_apply_a2a, moe_init  # noqa: E402
 
 
 def main():
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **mesh_kwargs(2))
     d_model, d_ff = 32, 16
     cfg = MoEConfig(n_experts=8, top_k=2, capacity_factor=8.0)  # no drops
     params = moe_init(jax.random.PRNGKey(0), d_model, d_ff, cfg)
@@ -34,7 +35,7 @@ def main():
         y, aux = moe_apply_a2a(p, xl, cfg, ep=4, axis_name="model")
         return y, jax.lax.pmean(jax.lax.pmean(aux, "model"), "data")
 
-    y_a2a, aux_a2a = jax.jit(jax.shard_map(
+    y_a2a, aux_a2a = jax.jit(shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P("data", None), P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
@@ -49,7 +50,7 @@ def main():
 
     # gradients flow through the a2a path
     def loss(w1):
-        y, _ = jax.jit(jax.shard_map(
+        y, _ = jax.jit(shard_map_compat(
             fn, mesh=mesh,
             in_specs=(P("data", None), P(None, None), P("model", None, None),
                       P("model", None, None), P("model", None, None)),

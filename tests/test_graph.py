@@ -1,7 +1,7 @@
 """Graph substrate tests: formats, generators, partitioning, sampling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph import generators
 from repro.graph.partition import partition_1d, partition_2d

@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (cpaa, forward_push, make_schedule, monte_carlo, power,
                         true_pagerank_dense, err_bound)
@@ -87,6 +87,27 @@ def test_batched_personalization_matches_columnwise():
         single = cpaa(dg, 0.85, 1e-8, p=cols[:, j]).pi
         np.testing.assert_allclose(np.asarray(batched[:, j]), np.asarray(single),
                                    rtol=1e-5, atol=1e-9)
+
+
+def test_batched_personalization_matches_singles_and_oracle():
+    """The micro-batcher's bedrock: a [n, B] solve == B single-column solves
+    == the dense oracle, column by column (seed-set personalizations)."""
+    g = generators.tri_mesh(9, 11)
+    dg = device_graph(g)
+    rng = np.random.default_rng(7)
+    B = 6
+    p = np.zeros((g.n, B), np.float32)
+    for j in range(B):
+        seeds = rng.choice(g.n, rng.integers(1, 4), replace=False)
+        p[seeds, j] = 1.0
+    batched = np.asarray(cpaa(dg, 0.85, 1e-8, p=jnp.asarray(p)).pi)
+    assert batched.shape == (g.n, B)
+    oracle = np.asarray(true_pagerank_dense(g, 0.85, p=p))
+    for j in range(B):
+        single = np.asarray(cpaa(dg, 0.85, 1e-8, p=jnp.asarray(p[:, j])).pi)
+        np.testing.assert_allclose(batched[:, j], single, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(batched[:, j], oracle[:, j],
+                                   rtol=1e-4, atol=1e-7)
 
 
 def test_monte_carlo_correlates_on_skewed_graph():

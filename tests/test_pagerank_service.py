@@ -1,0 +1,202 @@
+"""Online PPR query service: batching correctness, cache, epochs, top-k."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cpaa, true_pagerank_dense
+from repro.graph import generators
+from repro.graph.ops import device_graph
+from repro.serve import GraphRegistry, PageRankService, PPRQuery
+from repro.serve.graph_registry import _undirected_keys
+
+
+def make_service(g, **kw):
+    registry = GraphRegistry()
+    registry.register("g", g)
+    defaults = dict(max_batch=8, cache_capacity=64, max_top_k=8)
+    defaults.update(kw)
+    return PageRankService(registry, **defaults)
+
+
+def reference_topk(g, seeds, c, tol, k):
+    """Per-query cpaa (single column) + host top-k."""
+    p = np.zeros(g.n, np.float32)
+    p[list(seeds)] = 1.0
+    pi = np.asarray(cpaa(device_graph(g), c=c, tol=tol, p=jnp.asarray(p)).pi)
+    idx = np.argsort(-pi, kind="stable")[:k]
+    return idx, pi[idx]
+
+
+class TestMicroBatching:
+    def test_batched_answers_match_per_query_solves(self):
+        g = generators.tri_mesh(13, 17)
+        svc = make_service(g, max_batch=8)
+        rng = np.random.default_rng(0)
+        queries = [PPRQuery(qid=i, graph="g",
+                            seeds=tuple(int(s) for s in
+                                        rng.choice(g.n, 2, replace=False)),
+                            top_k=5)
+                   for i in range(6)]
+        for q in queries:
+            svc.submit(q)
+        results = svc.run_until_drained()
+        assert svc.stats["solves"] == 1          # 6 queries, ONE batched call
+        assert svc.stats["solved_queries"] == 6
+        for q in queries:
+            ref_idx, ref_scores = reference_topk(g, q.seeds, q.c, q.tol, q.top_k)
+            r = results[q.qid]
+            np.testing.assert_allclose(r.scores, ref_scores,
+                                       rtol=1e-5, atol=1e-5)
+            # compare as sets: near-ties may swap order between solves
+            assert set(r.indices.tolist()) == set(ref_idx.tolist())
+
+    def test_groups_split_by_operating_point(self):
+        """Different (c, tol) queries cannot share a coefficient vector."""
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        svc.submit(PPRQuery(qid=0, graph="g", seeds=(3,), c=0.85))
+        svc.submit(PPRQuery(qid=1, graph="g", seeds=(5,), c=0.5))
+        svc.run_until_drained()
+        assert svc.stats["solves"] == 2
+
+    def test_batch_padding_buckets(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g, max_batch=8)
+        for i in range(3):  # 3 live queries pad to the 4-bucket
+            svc.submit(PPRQuery(qid=i, graph="g", seeds=(i,)))
+        svc.run_until_drained()
+        assert svc.stats["padded_columns"] == 1
+
+
+class TestCache:
+    def test_cache_hit_skips_recomputation(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        q = PPRQuery(qid=0, graph="g", seeds=(7, 21), top_k=5)
+        assert svc.submit(q) is None             # cold: queued
+        first = svc.run_until_drained()[0]
+        solves_before = svc.stats["solves"]
+
+        hit = svc.submit(PPRQuery(qid=1, graph="g", seeds=(7, 21), top_k=5))
+        assert hit is not None and hit.cached    # served at submit time
+        assert svc.stats["solves"] == solves_before
+        np.testing.assert_array_equal(hit.indices, first.indices)
+        np.testing.assert_array_equal(hit.scores, first.scores)
+
+    def test_seed_order_is_canonicalized(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        svc.submit(PPRQuery(qid=0, graph="g", seeds=(21, 7)))
+        svc.run_until_drained()
+        hit = svc.submit(PPRQuery(qid=1, graph="g", seeds=(7, 21)))
+        assert hit is not None and hit.cached
+
+    def test_lru_eviction(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g, cache_capacity=2)
+        for i in range(4):
+            svc.submit(PPRQuery(qid=i, graph="g", seeds=(i,)))
+        svc.run_until_drained()
+        assert len(svc.cache) == 2
+        assert svc.cache.evictions == 2
+        # oldest entries are gone -> resolves again
+        assert svc.submit(PPRQuery(qid=10, graph="g", seeds=(0,))) is None
+
+
+class TestDynamicUpdates:
+    def test_update_bumps_epoch_and_invalidates(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        q = PPRQuery(qid=0, graph="g", seeds=(5, 50), top_k=5)
+        svc.submit(q)
+        stale = svc.run_until_drained()[0]
+        assert stale.epoch == 0
+
+        # connect two far-apart vertices: PPR mass must move
+        epoch = svc.update_graph("g", insert=[(5, 90)])
+        assert epoch == 1
+        assert svc.cache.invalidations == 1
+
+        res = svc.submit(PPRQuery(qid=1, graph="g", seeds=(5, 50), top_k=5))
+        assert res is None                       # stale result NOT served
+        fresh = svc.run_until_drained()[1]
+        assert fresh.epoch == 1 and not fresh.cached
+        assert not np.allclose(fresh.scores, stale.scores, atol=1e-7)
+
+        # the fresh answer matches a from-scratch solve on the updated graph
+        g_new = svc.registry.get("g").host
+        ref_idx, ref_scores = reference_topk(g_new, q.seeds, q.c, q.tol, 5)
+        np.testing.assert_allclose(fresh.scores, ref_scores,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_insert_then_delete_roundtrips(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        keys0 = _undirected_keys(svc.registry.get("g").host)
+        svc.update_graph("g", insert=[(0, 77)])
+        keys1 = _undirected_keys(svc.registry.get("g").host)
+        assert len(keys1) == len(keys0) + 1
+        svc.update_graph("g", delete=[(77, 0)])  # orientation-insensitive
+        keys2 = _undirected_keys(svc.registry.get("g").host)
+        np.testing.assert_array_equal(keys2, keys0)
+        assert svc.registry.get("g").epoch == 2
+
+    def test_duplicate_insert_and_absent_delete_are_noops(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        keys0 = _undirected_keys(g)
+        u, v = int(g.src[0]), int(g.dst[0])
+        svc.update_graph("g", insert=[(u, v)], delete=[(0, 98)])
+        np.testing.assert_array_equal(
+            _undirected_keys(svc.registry.get("g").host), keys0)
+
+
+class TestTopK:
+    def test_topk_agrees_with_dense_oracle(self):
+        g = generators.tri_mesh(8, 9)
+        svc = make_service(g, max_top_k=8)
+        seeds = (3, 40)
+        res = svc.query("g", seeds, tol=1e-8, top_k=8)
+
+        p = np.zeros(g.n)
+        p[list(seeds)] = 0.5
+        oracle = true_pagerank_dense(g, 0.85, p=p)
+        oracle_rank = np.argsort(-oracle, kind="stable")[:8]
+        assert set(res.indices.tolist()) == set(oracle_rank.tolist())
+        np.testing.assert_allclose(res.scores, oracle[res.indices],
+                                   rtol=1e-4, atol=1e-6)
+        # scores come back ranked
+        assert np.all(np.diff(res.scores) <= 1e-12)
+
+    def test_topk_truncation_per_query(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g, max_top_k=8)
+        r3 = svc.query("g", (4,), top_k=3)
+        r8 = svc.query("g", (4,), top_k=8)
+        assert len(r3.indices) == 3 and len(r8.indices) == 8
+        np.testing.assert_array_equal(r3.indices, r8.indices[:3])
+
+
+class TestValidation:
+    def test_rejects_bad_queries(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g, max_top_k=8)
+        with pytest.raises(ValueError):
+            svc.submit(PPRQuery(qid=0, graph="g", seeds=()))
+        with pytest.raises(ValueError):
+            svc.submit(PPRQuery(qid=1, graph="g", seeds=(g.n,)))
+        with pytest.raises(ValueError):
+            svc.submit(PPRQuery(qid=2, graph="g", seeds=(0,), top_k=9))
+        with pytest.raises(KeyError):
+            svc.submit(PPRQuery(qid=3, graph="nope", seeds=(0,)))
+
+    def test_registry_rejects_duplicates_and_bad_edges(self):
+        registry = GraphRegistry()
+        g = generators.tri_mesh(5, 5)
+        registry.register("g", g)
+        with pytest.raises(ValueError):
+            registry.register("g", g)
+        with pytest.raises(ValueError):
+            registry.apply_updates("g", insert=[(0, g.n)])
+        with pytest.raises(ValueError):
+            registry.apply_updates("g", insert=[(3, 3)])
