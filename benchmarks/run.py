@@ -1,38 +1,83 @@
 """Benchmark driver: one section per paper table/figure + kernel benches.
 
-Prints CSV sections; `python -m benchmarks.run [--quick]`.
+Prints CSV sections; `python -m benchmarks.run [--quick] [--json PATH]`.
+
+--json PATH additionally writes every section as machine-readable JSON —
+including the structured engine-comparison records (COO vs block-ELL vs
+fused round, per graph family and batch size) — so CI can archive the perf
+trajectory run over run.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 
 
-def _emit(title: str, rows):
+def _emit(sections, title: str, rows):
     print(f"\n## {title}")
     for row in rows:
         print(",".join(str(x) for x in row))
+    sections[title] = [list(row) for row in rows]
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    from benchmarks import kernels_bench, paper_tables, serve_pagerank_bench
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results to PATH as JSON "
+                         "(e.g. BENCH_pagerank.json)")
+    args = ap.parse_args(argv)
+    quick = args.quick
 
-    _emit("theory_check (paper §4.2 claims)", paper_tables.theory_check())
-    _emit("figure1_convergence_rate", paper_tables.fig1_convergence_rate())
-    _emit("figure2_relative_error", paper_tables.fig2_relative_error())
+    import jax
+    from benchmarks import (engine_bench, kernels_bench, paper_tables,
+                            serve_pagerank_bench)
+
+    sections: dict[str, list] = {}
+    _emit(sections, "theory_check (paper §4.2 claims)",
+          paper_tables.theory_check())
+    _emit(sections, "figure1_convergence_rate",
+          paper_tables.fig1_convergence_rate())
+    _emit(sections, "figure2_relative_error",
+          paper_tables.fig2_relative_error())
+
+    # the engine comparison runs in BOTH modes: it is the perf-trajectory
+    # section CI tracks from every push
+    eng_rows, eng_records = engine_bench.engine_compare(quick=quick)
+    _emit(sections, "engine_compare_cpaa_end_to_end", eng_rows)
+
     if not quick:
-        _emit("figure3_err_vs_rounds (NACA0015 stand-in)",
+        _emit(sections, "figure3_err_vs_rounds (NACA0015 stand-in)",
               paper_tables.fig3_err_vs_rounds_and_time())
-        _emit("table2_iterations_and_time (six datasets)",
+        _emit(sections, "table2_iterations_and_time (six datasets)",
               paper_tables.table2_iterations_and_time())
-        _emit("figure4_time_vs_error (delaunay stand-in)",
+        _emit(sections, "figure4_time_vs_error (delaunay stand-in)",
               paper_tables.fig4_time_vs_error())
-        _emit("beyond_paper_basis_ablation (paper §6 future work)",
+        _emit(sections, "beyond_paper_basis_ablation (paper §6 future work)",
               paper_tables.basis_ablation())
-        _emit("kernel_spmm_formats", kernels_bench.spmm_formats())
-        _emit("kernel_cheb_fused_update", kernels_bench.cheb_fused_update())
-        _emit("ppr_serving_qps_vs_batch",
+        _emit(sections, "kernel_spmm_formats", kernels_bench.spmm_formats())
+        _emit(sections, "kernel_cheb_fused_update",
+              kernels_bench.cheb_fused_update())
+        _emit(sections, "ppr_serving_qps_vs_batch",
               serve_pagerank_bench.qps_vs_batch())
+
+    if args.json:
+        payload = {
+            "meta": {
+                "quick": quick,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+            },
+            "engine_compare": eng_records,
+            "sections": sections,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

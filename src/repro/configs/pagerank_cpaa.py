@@ -33,6 +33,10 @@ C = 0.85
 TOL = 1e-3
 LANE = 128
 IMBALANCE = 1.15   # per-device edge-count padding factor
+# single-device solve-engine format ("auto" | "coo" | "block_ell" | "fused");
+# the distributed dry-run cells partition the COO edge list regardless, but
+# smoke_run and local solves route through core/engine.select_engine.
+ENGINE = "auto"
 
 SHAPES = {
     "pr_mesh_67m": dict(kind="pagerank", n=1 << 26, deg=6.0, batch=None,
@@ -97,7 +101,8 @@ def abstract_partition_2d(n_orig: int, m: int, grid) -> _AbstractPart2D:
 
 
 def full_config():
-    return {"c": C, "tol": TOL, "rounds": make_schedule(C, TOL).rounds}
+    return {"c": C, "tol": TOL, "rounds": make_schedule(C, TOL).rounds,
+            "engine": ENGINE}
 
 
 def smoke_config():
@@ -184,11 +189,11 @@ def build(shape: str, multi_pod: bool, _rounds: int | None = None):
 def smoke_run(seed: int = 0):
     """CPU: CPAA on a small mesh graph vs direct solve."""
     import numpy as np
-    from repro.core import cpaa, true_pagerank_dense
+    from repro.core import cpaa, select_engine, true_pagerank_dense
     from repro.graph import generators
-    from repro.graph.ops import device_graph
     g = generators.tri_mesh(9, 11)
-    pi = np.asarray(cpaa(device_graph(g), C, 1e-8).pi, np.float64)
+    eng = select_engine(g, mode=ENGINE)
+    pi = np.asarray(cpaa(eng, C, 1e-8).pi, np.float64)
     pi_true = true_pagerank_dense(g, C)
     return {"max_rel_err": jnp.float32(np.max(np.abs(pi - pi_true) / pi_true)),
             "loss": jnp.float32(0.0)}

@@ -28,6 +28,9 @@ class PPRServeConfig:
     max_batch: int = 32
     cache_capacity: int = 4096
     max_top_k: int = 16
+    # solve-engine format: "auto" (fill-rate heuristic), "coo", "block_ell",
+    # or "fused" — see core/engine.select_engine and docs/performance.md
+    engine: str = "auto"
 
 
 def full_config() -> PPRServeConfig:
@@ -50,7 +53,7 @@ def make_service(cfg: PPRServeConfig):
     """Registry with every configured graph warm + the service over it."""
     from repro.serve.graph_registry import GraphRegistry
     from repro.serve.pagerank_service import PageRankService
-    reg = GraphRegistry()
+    reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
     svc = PageRankService(reg, max_batch=cfg.max_batch,

@@ -11,6 +11,13 @@ from repro.core.chebyshev import (
     rounds_for_tolerance,
     sigma_c,
 )
+from repro.core.engine import (
+    BlockEllEngine,
+    CooEngine,
+    FusedBlockEllEngine,
+    as_engine,
+    select_engine,
+)
 from repro.core.pagerank import (
     PageRankResult,
     cpaa,
@@ -26,4 +33,6 @@ __all__ = [
     "make_schedule", "power_rounds_for_tolerance", "rounds_for_tolerance",
     "sigma_c", "PageRankResult", "cpaa", "cpaa_fixed", "forward_push",
     "monte_carlo", "power", "true_pagerank_dense",
+    "CooEngine", "BlockEllEngine", "FusedBlockEllEngine", "as_engine",
+    "select_engine",
 ]

@@ -1,0 +1,284 @@
+"""Pluggable SpMM engines: the solver hot path behind one interface.
+
+Every PageRank solver iteration is one application of the transition matrix
+P = A D^{-1} plus O(n) vector work. How P x is computed is a format choice,
+not an algorithm choice, so it lives behind an `Engine`:
+
+  * CooEngine          — gather + segment_sum over the COO edge list with the
+                         1/deg[src] weights folded into a precomputed per-edge
+                         array (no per-iteration inv_deg gather). The
+                         universal fallback: works for any graph, any batch.
+  * BlockEllEngine     — the block-ELL Pallas SpMM (`kernels/bsr_spmm`):
+                         vertices BFS-reordered so edges cluster into BxB
+                         tiles, each tile a dense matmul on the MXU. The
+                         engine owns the perm/padding round-trip, so callers
+                         see original vertex ids throughout.
+  * FusedBlockEllEngine — BlockEllEngine whose Chebyshev round chains the
+                         SpMM with the fused `cheb_step` kernel (one VMEM
+                         pass for the recurrence + accumulation: 5nB bytes
+                         per round instead of 8nB).
+
+Engines are registered pytrees, so they pass through `jax.jit`/`lax.scan`
+like the DeviceGraph they replace. Solvers call:
+
+    x  = eng.to_internal(p)        # once per solve: layout in
+    y  = eng.apply(x)              # per round: y = P x
+    t, acc = eng.cheb_round(y, t, acc, ck)   # per round: vector work
+    pi = eng.from_internal(acc)    # once per solve: layout out
+
+`select_engine(g, batch)` picks a format by fill-rate: block-ELL pays off
+when the BxB tiles are dense enough that the dense-tile flops beat the
+gather/scatter traffic of segment_sum (community and mesh-like graphs);
+scattered graphs (kmer chains, power-law hubs) stay on COO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.ops import DeviceGraph, device_graph, spmm, spmv
+from repro.graph.structure import (BlockEll, Graph, block_fill_rate,
+                                   build_block_ell)
+from repro.kernels.bsr_spmm.ops import bsr_spmm
+from repro.kernels.cheb_step.ops import cheb_step
+
+__all__ = [
+    "CooEngine",
+    "BlockEllEngine",
+    "FusedBlockEllEngine",
+    "as_engine",
+    "select_engine",
+    "ENGINE_MODES",
+]
+
+ENGINE_MODES = ("auto", "coo", "block_ell", "fused")
+
+
+def _default_cheb_round(y, t, acc, ck):
+    """Unfused three-term recurrence + accumulation (XLA fuses the arithmetic;
+    the kernel engines override this to fuse the HBM traffic too)."""
+    t_next = 2.0 * y - t
+    return t_next, acc + ck * t_next
+
+
+@jax.tree_util.register_pytree_node_class
+class CooEngine:
+    """segment_sum over the COO edge list with precomputed edge weights."""
+
+    name = "coo"
+
+    def __init__(self, dg: DeviceGraph):
+        self.dg = dg
+
+    @property
+    def n(self) -> int:
+        return self.dg.n
+
+    @property
+    def dtype(self):
+        return self.dg.inv_deg.dtype
+
+    def to_internal(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def from_internal(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return spmv(self.dg, x) if x.ndim == 1 else spmm(self.dg, x)
+
+    def cheb_round(self, y, t, acc, ck):
+        return _default_cheb_round(y, t, acc, ck)
+
+    def tree_flatten(self):
+        return (self.dg,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class BlockEllEngine:
+    """Block-ELL SpMM engine over BFS-reordered, block-padded vertices.
+
+    Internal layout: [n_pad] (or [n_pad, B]) float32 in BFS order, where
+    n_pad = n_row_blocks * block >= n. Padding rows carry zero mass and stay
+    zero through every round (empty slots have all-zero values), so
+    `from_internal` is a plain inverse-permutation gather of the first rows.
+    """
+
+    name = "block_ell"
+
+    def __init__(self, block_cols: jax.Array, values: jax.Array,
+                 perm: jax.Array, inv_perm: jax.Array, n_orig: int,
+                 block: int, use_kernel: bool | None = None,
+                 interpret: bool | None = None, fill_rate: float | None = None):
+        self.block_cols = block_cols   # [n_rb, S] int32
+        self.values = values           # [n_rb, S, B, B] f32
+        self.perm = perm               # [n_orig] old id at BFS position
+        self.inv_perm = inv_perm       # [n_orig] BFS position of old id
+        self.n_orig = n_orig
+        self.block = block
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.fill_rate = fill_rate     # informational; not a pytree aux
+
+    @classmethod
+    def from_block_ell(cls, be: BlockEll, use_kernel: bool | None = None,
+                       interpret: bool | None = None,
+                       pad_slots_to_pow2: bool = False) -> "BlockEllEngine":
+        block_cols, values = be.block_cols, be.values
+        if pad_slots_to_pow2:
+            s = 1
+            while s < be.slots:
+                s *= 2
+            if s > be.slots:
+                # extra slots point at the diagonal with zero values: harmless
+                # by construction, and the padded S keeps jit shapes stable
+                # when edge updates change the true max-slots-per-row-block.
+                n_rb = be.n_row_blocks
+                diag = np.tile(np.arange(n_rb, dtype=np.int32)[:, None],
+                               (1, s - be.slots))
+                block_cols = np.concatenate([block_cols, diag], axis=1)
+                values = np.concatenate(
+                    [values, np.zeros((n_rb, s - be.slots, be.block, be.block),
+                                      np.float32)], axis=1)
+        inv = np.empty(be.n_orig, np.int64)
+        inv[be.perm] = np.arange(be.n_orig)
+        return cls(block_cols=jnp.asarray(block_cols),
+                   values=jnp.asarray(values),
+                   perm=jnp.asarray(be.perm, jnp.int32),
+                   inv_perm=jnp.asarray(inv, jnp.int32),
+                   n_orig=be.n_orig, block=be.block,
+                   use_kernel=use_kernel, interpret=interpret,
+                   fill_rate=be.fill_rate)
+
+    @classmethod
+    def from_graph(cls, g: Graph, block: int = 128, reorder: bool = True,
+                   use_kernel: bool | None = None,
+                   interpret: bool | None = None,
+                   pad_slots_to_pow2: bool = False,
+                   perm=None) -> "BlockEllEngine":
+        return cls.from_block_ell(build_block_ell(g, block=block,
+                                                  reorder=reorder, perm=perm),
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  pad_slots_to_pow2=pad_slots_to_pow2)
+
+    @property
+    def n(self) -> int:
+        return self.n_orig
+
+    @property
+    def n_pad(self) -> int:
+        return self.block_cols.shape[0] * self.block
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def to_internal(self, x: jax.Array) -> jax.Array:
+        xp = x.astype(jnp.float32)[self.perm]
+        pad = self.n_pad - self.n_orig
+        if pad:
+            xp = jnp.pad(xp, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        return xp
+
+    def from_internal(self, x: jax.Array) -> jax.Array:
+        return x[self.inv_perm]
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return bsr_spmm(self.block_cols, self.values, x,
+                        use_kernel=self.use_kernel, interpret=self.interpret)
+
+    def cheb_round(self, y, t, acc, ck):
+        return _default_cheb_round(y, t, acc, ck)
+
+    def tree_flatten(self):
+        children = (self.block_cols, self.values, self.perm, self.inv_perm)
+        aux = (self.n_orig, self.block, self.use_kernel, self.interpret)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedBlockEllEngine(BlockEllEngine):
+    """Block-ELL SpMM + fused Chebyshev-update kernel in the scan body."""
+
+    name = "block_ell_fused"
+
+    def cheb_round(self, y, t, acc, ck):
+        return cheb_step(y, t, acc, ck,
+                         use_kernel=self.use_kernel, interpret=self.interpret)
+
+
+def as_engine(obj) -> CooEngine | BlockEllEngine:
+    """Coerce a DeviceGraph (the historical solver argument) to an engine;
+    pass engines through unchanged."""
+    if isinstance(obj, DeviceGraph):
+        return CooEngine(obj)
+    if hasattr(obj, "apply") and hasattr(obj, "to_internal"):
+        return obj
+    raise TypeError(f"expected DeviceGraph or Engine, got {type(obj)!r}")
+
+
+def _default_min_fill() -> float:
+    # On the MXU, dense-tile flops are nearly free next to gather/scatter
+    # HBM traffic, so even thin tiles pay off; on CPU the jnp-oracle einsum
+    # spends real flops on zero fill, so the bar is higher (measured
+    # crossover on mesh graphs is ~0.03-0.05 at B=128).
+    return 0.01 if jax.default_backend() == "tpu" else 0.05
+
+
+def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
+                  dg: DeviceGraph | None = None, dtype=jnp.float32,
+                  block: int = 128, min_fill: float | None = None,
+                  use_kernel: bool | None = None, interpret: bool | None = None,
+                  stable_shapes: bool = False):
+    """Pick/build the solve engine for a graph (host-side, once per epoch).
+
+    mode: "coo" | "block_ell" | "fused" force a format; "auto" builds the
+    block-ELL tiling and keeps it only when its tile fill-rate clears
+    `min_fill` (dense-enough tiles to beat segment_sum) — otherwise COO.
+    batch: expected personalization width (auto mode nudges tiny batches on
+    small graphs back to COO; the MXU win needs columns to amortize the
+    tiling round-trip).
+    dg: reuse an existing DeviceGraph for the COO path (the serving registry
+    passes its padded, shape-stable device graph).
+    stable_shapes: pad the ELL slot count to a power of two so edge updates
+    rarely change jit shapes.
+    """
+    if mode not in ENGINE_MODES:
+        raise ValueError(f"engine mode {mode!r} not in {ENGINE_MODES}")
+
+    def coo():
+        return CooEngine(dg if dg is not None else device_graph(g, dtype))
+
+    if mode == "coo":
+        return coo()
+    if mode in ("block_ell", "fused"):
+        cls = BlockEllEngine if mode == "block_ell" else FusedBlockEllEngine
+        return cls.from_graph(g, block=block, use_kernel=use_kernel,
+                              interpret=interpret,
+                              pad_slots_to_pow2=stable_shapes)
+
+    # auto: too small to tile -> COO without paying the host-side build
+    if g.n < 2 * block or (batch is not None and batch < 8 and g.n < 8 * block):
+        return coo()
+    # probe the tiling fill WITHOUT materializing tile values — scattered
+    # graphs (the ones that fail the threshold) are exactly where the
+    # [n_rb, S, B, B] tensor would be largest, and this runs on every
+    # serving epoch bump
+    fill, perm = block_fill_rate(g, block=block)
+    threshold = _default_min_fill() if min_fill is None else min_fill
+    if fill < threshold:
+        return coo()
+    return FusedBlockEllEngine.from_graph(g, block=block,
+                                          use_kernel=use_kernel,
+                                          interpret=interpret,
+                                          pad_slots_to_pow2=stable_shapes,
+                                          perm=perm)

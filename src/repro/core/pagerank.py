@@ -8,10 +8,17 @@
                   Push / IFP1 analogue): pi_M ∝ Σ_{k<=M} (cP)^k p.
 * monte_carlo   — random-walk estimator (the MC family the paper cites).
 
-All solvers are jit-compatible (jax.lax control flow), operate on a
-DeviceGraph, support single vectors [n] or batched personalization [n, B]
-(the TPU adaptation: B columns feed the MXU), and return *normalized*
-PageRank (sums to 1 per column).
+All solvers are jit-compatible (jax.lax control flow), support single
+vectors [n] or batched personalization [n, B] (the TPU adaptation: B columns
+feed the MXU), and return *normalized* PageRank (sums to 1 per column).
+
+The first argument of every solver is a DeviceGraph **or an Engine**
+(`core.engine`): a DeviceGraph is wrapped in the COO segment-sum engine for
+backwards compatibility, while a BlockEllEngine / FusedBlockEllEngine routes
+every iteration through the Pallas block-ELL SpMM (and fused Chebyshev
+update) instead. Engines own their internal layout (BFS permutation, block
+padding); solvers convert once at entry/exit, so callers always see original
+vertex ids.
 """
 from __future__ import annotations
 
@@ -22,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.chebyshev import ChebSchedule, make_schedule
-from repro.graph.ops import DeviceGraph, spmv, spmm
+from repro.core.engine import CooEngine, as_engine
+from repro.graph.ops import DeviceGraph  # noqa: F401  (re-exported API surface)
 
 __all__ = ["PageRankResult", "cpaa", "power", "forward_push", "monte_carlo",
            "cpaa_fixed", "true_pagerank_dense"]
@@ -35,114 +43,121 @@ class PageRankResult:
     history: jax.Array | None = None  # [M, ...] per-round accumulators if kept
 
 
-def _apply(dg: DeviceGraph, x: jax.Array) -> jax.Array:
-    return spmv(dg, x) if x.ndim == 1 else spmm(dg, x)
-
-
 def _normalize(acc: jax.Array) -> jax.Array:
     return acc / jnp.sum(acc, axis=0, keepdims=(acc.ndim > 1))
 
 
+def _uniform_p(eng) -> jax.Array:
+    return jnp.ones((eng.n,), eng.dtype)
+
+
 @partial(jax.jit, static_argnames=("rounds", "keep_history"))
-def cpaa_fixed(dg: DeviceGraph, coeffs: jax.Array, p: jax.Array,
+def cpaa_fixed(dg, coeffs: jax.Array, p: jax.Array,
                rounds: int, keep_history: bool = False):
     """CPAA with a fixed round count (jit-friendly core).
 
+    dg:     DeviceGraph or Engine (see module docstring).
     coeffs: [rounds+1] with coeffs[0] already halved (= c0/2).
     p:      [n] or [n, B] personalization (need not be normalized; the final
             normalization in Algorithm 1 line 36 absorbs scaling).
     """
-    t_prev = p                      # T_0(P) p
+    eng = as_engine(dg)
+    t_prev = eng.to_internal(p)     # T_0(P) p
     acc = coeffs[0] * t_prev        # (c0/2) T_0 p
-    t_cur = _apply(dg, p)           # T_1(P) p = P p
+    t_cur = eng.apply(t_prev)       # T_1(P) p = P p
     acc = acc + coeffs[1] * t_cur
 
     def body(carry, ck):
         t_prev, t_cur, acc = carry
-        t_next = 2.0 * _apply(dg, t_cur) - t_prev   # three-term recurrence
-        acc = acc + ck * t_next
-        return (t_cur, t_next, acc), (acc if keep_history else 0.0)
+        y = eng.apply(t_cur)        # SpMV/SpMM: the round's only graph work
+        t_next, acc = eng.cheb_round(y, t_prev, acc, ck)
+        return (t_cur, t_next, acc), \
+            (eng.from_internal(acc) if keep_history else 0.0)
 
     (_, _, acc), hist = jax.lax.scan(body, (t_prev, t_cur, acc), coeffs[2:])
-    return _normalize(acc), hist
+    return _normalize(eng.from_internal(acc)), hist
 
 
-def cpaa(dg: DeviceGraph, c: float = 0.85, tol: float = 1e-6,
+def cpaa(dg, c: float = 0.85, tol: float = 1e-6,
          p: jax.Array | None = None, schedule: ChebSchedule | None = None,
          keep_history: bool = False) -> PageRankResult:
     """The paper's Algorithm 1. Rounds chosen from ERR_M < tol (Formula 8)."""
+    eng = as_engine(dg)
     sched = schedule or make_schedule(c, tol)
     if p is None:
-        p = jnp.ones((dg.n,), dg.inv_deg.dtype)  # paper: T_i = 1 (mass n)
+        p = _uniform_p(eng)  # paper: T_i = 1 (mass n)
     coeffs = jnp.asarray(sched.coeffs, p.dtype)
-    pi, hist = cpaa_fixed(dg, coeffs, p, rounds=sched.rounds,
+    pi, hist = cpaa_fixed(eng, coeffs, p, rounds=sched.rounds,
                           keep_history=keep_history)
     return PageRankResult(pi=pi, iterations=sched.rounds,
                           history=hist if keep_history else None)
 
 
 @partial(jax.jit, static_argnames=("max_iter",))
-def _power_fixed(dg: DeviceGraph, c: float, p: jax.Array, max_iter: int,
-                 tol: float):
+def _power_fixed(dg, c: float, p: jax.Array, max_iter: int, tol: float):
+    eng = as_engine(dg)
+    x0 = eng.to_internal(p)
+    tiny = jnp.asarray(jnp.finfo(x0.dtype).tiny, x0.dtype)
+
     def cond(carry):
         _, k, resid = carry
         return jnp.logical_and(k < max_iter, resid >= tol)
 
     def body(carry):
         x, k, _ = carry
-        x_new = c * _apply(dg, x) + (1.0 - c) * p
-        resid = jnp.max(jnp.abs(x_new - x)) / jnp.maximum(jnp.max(jnp.abs(x_new)), 1e-30)
-        return x_new, k + 1, resid
+        # cast back: the traced scalars c/tol would otherwise promote low-
+        # precision personalizations (bf16) to f32 and break the carry types
+        x_new = (c * eng.apply(x) + (1.0 - c) * x0).astype(x0.dtype)
+        resid = jnp.max(jnp.abs(x_new - x)) / \
+            jnp.maximum(jnp.max(jnp.abs(x_new)), tiny)
+        return x_new, k + 1, resid.astype(x0.dtype)
 
-    x0 = p
-    x, k, _ = jax.lax.while_loop(cond, body, (x0, jnp.int32(0), jnp.float32(jnp.inf)))
-    return _normalize(x), k
+    # residual carry in p's dtype (float64/bf16 personalizations included)
+    inf = jnp.asarray(jnp.inf, x0.dtype)
+    x, k, _ = jax.lax.while_loop(cond, body, (x0, jnp.int32(0), inf))
+    return _normalize(eng.from_internal(x)), k
 
 
-def power(dg: DeviceGraph, c: float = 0.85, tol: float = 1e-10,
+def power(dg, c: float = 0.85, tol: float = 1e-10,
           p: jax.Array | None = None, max_iter: int = 500) -> PageRankResult:
     """Power iteration x <- c P x + (1-c) p (the paper's SPI/MPI baseline)."""
+    eng = as_engine(dg)
     if p is None:
-        p = jnp.ones((dg.n,), dg.inv_deg.dtype) / dg.n
-    pi, k = _power_fixed(dg, c, p, max_iter, tol)
+        p = _uniform_p(eng) / eng.n
+    pi, k = _power_fixed(eng, c, p, max_iter, tol)
     return PageRankResult(pi=pi, iterations=int(k))
 
 
 @partial(jax.jit, static_argnames=("rounds",))
-def _fp_fixed(dg: DeviceGraph, c: float, p: jax.Array, rounds: int):
+def _fp_fixed(dg, c: float, p: jax.Array, rounds: int):
+    eng = as_engine(dg)
+    r0 = eng.to_internal(p)
+
     def body(carry, _):
         r, acc = carry
-        r = c * _apply(dg, r)      # residual mass pushed one hop
+        r = c * eng.apply(r)       # residual mass pushed one hop
         return (r, acc + r), 0.0
 
-    (_, acc), _ = jax.lax.scan(body, (p, p), None, length=rounds)
-    return _normalize(acc)
+    (_, acc), _ = jax.lax.scan(body, (r0, r0), None, length=rounds)
+    return _normalize(eng.from_internal(acc))
 
 
-def forward_push(dg: DeviceGraph, c: float = 0.85, rounds: int = 50,
+def forward_push(dg, c: float = 0.85, rounds: int = 50,
                  p: jax.Array | None = None) -> PageRankResult:
     """Truncated geometric series Σ_{k<=M} (cP)^k p — the monomial-basis
     baseline CPAA is compared against (paper §1, §3)."""
+    eng = as_engine(dg)
     if p is None:
-        p = jnp.ones((dg.n,), dg.inv_deg.dtype) / dg.n
-    return PageRankResult(pi=_fp_fixed(dg, c, p, rounds), iterations=rounds)
+        p = _uniform_p(eng) / eng.n
+    return PageRankResult(pi=_fp_fixed(eng, c, p, rounds), iterations=rounds)
 
 
-@partial(jax.jit, static_argnames=("walks_per_node", "max_len"))
-def _mc_fixed(dg: DeviceGraph, c: float, key: jax.Array, walks_per_node: int,
+@partial(jax.jit, static_argnames=("n", "walks_per_node", "max_len"))
+def _mc_fixed(deg: jax.Array, row_start: jax.Array, dst_sorted: jax.Array,
+              n: int, c: float, key: jax.Array, walks_per_node: int,
               max_len: int):
-    n = dg.n
-    # CSR-ish neighbour sampling needs row offsets; emulate with a sorted-src
-    # edge table: for vertex u pick a uniform edge among its out-edges.
-    # We precompute nothing device-side: sample an edge index uniformly from
-    # [row_start[u], row_start[u+1]). Build offsets with segment_sum + cumsum.
-    ones = jnp.ones_like(dg.src, jnp.int32)
-    deg = jax.ops.segment_sum(ones, dg.src, num_segments=n)
-    row_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                                 jnp.cumsum(deg, dtype=jnp.int32)[:-1]])
-    order = jnp.argsort(dg.src, stable=True)
-    dst_sorted = dg.dst[order]
-
+    """Random walks over a precomputed sorted-src CSR (DeviceGraph.csr()):
+    for vertex u pick a uniform edge index in [row_start[u], row_start[u+1])."""
     walkers = jnp.tile(jnp.arange(n, dtype=jnp.int32), walks_per_node)
     alive = jnp.ones_like(walkers, jnp.bool_)
     counts = jnp.zeros((n,), jnp.float32)
@@ -167,10 +182,16 @@ def _mc_fixed(dg: DeviceGraph, c: float, key: jax.Array, walks_per_node: int,
     return counts / jnp.sum(counts)
 
 
-def monte_carlo(dg: DeviceGraph, c: float = 0.85, walks_per_node: int = 16,
+def monte_carlo(dg, c: float = 0.85, walks_per_node: int = 16,
                 max_len: int = 64, seed: int = 0) -> PageRankResult:
     """Terminating random walks; π_i ∝ #walks that stop at i (paper §1 [6])."""
-    pi = _mc_fixed(dg, c, jax.random.PRNGKey(seed), walks_per_node, max_len)
+    eng = as_engine(dg)
+    if not isinstance(eng, CooEngine):
+        raise TypeError("monte_carlo samples the COO edge list; pass a "
+                        "DeviceGraph or CooEngine")
+    deg, row_start, dst_sorted = eng.dg.csr()  # host-built once, cached
+    pi = _mc_fixed(deg, row_start, dst_sorted, eng.dg.n, c,
+                   jax.random.PRNGKey(seed), walks_per_node, max_len)
     return PageRankResult(pi=pi, iterations=max_len)
 
 

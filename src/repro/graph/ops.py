@@ -26,11 +26,15 @@ __all__ = [
 class DeviceGraph:
     """Device-resident COO graph + precomputed 1/deg (the paper's P).
 
-    `w` is an optional [m] per-edge multiplier. Its only in-tree use is
-    zero-weighted padding edges: the serving registry pads edge arrays up to
-    power-of-two buckets so that edge-update batches keep jit shapes stable
-    (no retrace per update). w=None is the common unpadded case and costs
-    nothing.
+    `w` is the [m] per-edge weight of P: 1/deg[src] for real edges, 0 for
+    the zero-weight padding edges the serving registry appends to keep jit
+    shapes stable across updates. `device_graph` always precomputes it, so
+    the per-iteration SpMV is one gather + one multiply + one segment_sum —
+    no inv_deg gather on the hot path. Hand-built graphs may pass w=None and
+    fall back to gathering inv_deg[src] per call.
+
+    `inv_deg` stays for vertex-wise consumers (degree_normalize, GNN
+    normalizations).
     """
 
     def __init__(self, n: int, src: jax.Array, dst: jax.Array,
@@ -40,6 +44,26 @@ class DeviceGraph:
         self.dst = dst
         self.inv_deg = inv_deg
         self.w = w
+        self._csr = None
+
+    def csr(self):
+        """Sorted-src CSR view (deg, row_start, dst_sorted) as device arrays,
+        computed host-side once and cached on the instance. Zero-weight
+        padding edges are excluded so sampling never walks them. Call outside
+        jit (the result feeds jitted code as plain arguments)."""
+        if self._csr is None:
+            src = np.asarray(self.src)
+            dst = np.asarray(self.dst)
+            if self.w is not None:
+                keep = np.asarray(self.w) > 0
+                src, dst = src[keep], dst[keep]
+            deg = np.bincount(src, minlength=self.n).astype(np.int32)
+            row_start = np.concatenate(
+                [np.zeros(1, np.int32), np.cumsum(deg, dtype=np.int32)[:-1]])
+            order = np.argsort(src, kind="stable")
+            self._csr = (jnp.asarray(deg), jnp.asarray(row_start),
+                         jnp.asarray(dst[order]))
+        return self._csr
 
     def tree_flatten(self):
         return (self.src, self.dst, self.inv_deg, self.w), self.n
@@ -56,36 +80,38 @@ jax.tree_util.register_pytree_node(
 def device_graph(g: Graph, dtype=jnp.float32,
                  pad_edges_to: int | None = None) -> DeviceGraph:
     deg = np.maximum(g.deg, 1).astype(np.float64)
-    src, dst, w = g.src, g.dst, None
+    inv_deg = 1.0 / deg
+    src, dst, w = g.src, g.dst, inv_deg[g.src]
     if pad_edges_to is not None and pad_edges_to > g.m:
         pad = pad_edges_to - g.m
         zeros = np.zeros(pad, np.int32)
         src = np.concatenate([src, zeros])
         dst = np.concatenate([dst, zeros])
-        w = np.concatenate([np.ones(g.m, np.float64), np.zeros(pad)])
+        w = np.concatenate([w, np.zeros(pad)])
     return DeviceGraph(
         n=g.n,
         src=jnp.asarray(src),
         dst=jnp.asarray(dst),
-        inv_deg=jnp.asarray((1.0 / deg), dtype),
-        w=None if w is None else jnp.asarray(w, dtype),
+        inv_deg=jnp.asarray(inv_deg, dtype),
+        w=jnp.asarray(w, dtype),
     )
+
+
+def _transition_matmul(dg: DeviceGraph, x: jax.Array) -> jax.Array:
+    """Shared spmv/spmm body: y[dst] += w[e] * x[src] over the edge list."""
+    w = dg.w if dg.w is not None else dg.inv_deg[dg.src]
+    contrib = x[dg.src] * (w if x.ndim == 1 else w[:, None])
+    return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
 
 
 def spmv(dg: DeviceGraph, x: jax.Array) -> jax.Array:
     """y = P x with P = A D^{-1}: y[dst] += x[src] / deg[src]. x: [n]."""
-    contrib = x[dg.src] * dg.inv_deg[dg.src]
-    if dg.w is not None:
-        contrib = contrib * dg.w
-    return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
+    return _transition_matmul(dg, x)
 
 
 def spmm(dg: DeviceGraph, x: jax.Array) -> jax.Array:
     """Batched transition: x [n, B] -> P x [n, B] (multi-source PageRank)."""
-    contrib = x[dg.src] * dg.inv_deg[dg.src][:, None]
-    if dg.w is not None:
-        contrib = contrib * dg.w[:, None]
-    return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
+    return _transition_matmul(dg, x)
 
 
 def aggregate(dg: DeviceGraph, x: jax.Array, kind: str = "sum",

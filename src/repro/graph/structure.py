@@ -19,7 +19,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Graph", "BlockEll", "reorder_bfs", "build_block_ell"]
+__all__ = ["Graph", "BlockEll", "reorder_bfs", "build_block_ell",
+           "block_fill_rate"]
 
 
 @dataclass(frozen=True)
@@ -151,10 +152,32 @@ class BlockEll:
         return self.block_cols.shape[1]
 
 
-def build_block_ell(g: Graph, block: int = 128, reorder: bool = True) -> BlockEll:
-    """Tile P into BxB dense blocks (host-side, numpy)."""
+def block_fill_rate(g: Graph, block: int = 128,
+                    perm: np.ndarray | None = None) -> tuple[float, np.ndarray]:
+    """(fill_rate, perm) of the BxB tiling WITHOUT materializing tile values.
+
+    Counting occupied tiles is O(m) on the edge list; the [n_rb, S, B, B]
+    values tensor it avoids is the expensive part of `build_block_ell`
+    (hundreds of MB for scattered graphs, where S is largest). Engine
+    auto-selection probes the fill with this and only builds tiles for
+    graphs that clear the threshold; pass the returned perm back to
+    `build_block_ell` to reuse the BFS.
+    """
+    perm = reorder_bfs(g) if perm is None else perm
+    inv = np.empty(g.n, np.int64)
+    inv[perm] = np.arange(g.n)
+    n_rb = (g.n + block - 1) // block
+    tiles = np.unique((inv[g.dst] // block) * n_rb + (inv[g.src] // block))
+    return g.m / max(len(tiles) * block * block, 1), perm
+
+
+def build_block_ell(g: Graph, block: int = 128, reorder: bool = True,
+                    perm: np.ndarray | None = None) -> BlockEll:
+    """Tile P into BxB dense blocks (host-side, numpy). A precomputed BFS
+    `perm` (e.g. from `block_fill_rate`) skips the reorder."""
     n_orig = g.n
-    perm = reorder_bfs(g) if reorder else np.arange(n_orig, dtype=np.int64)
+    if perm is None:
+        perm = reorder_bfs(g) if reorder else np.arange(n_orig, dtype=np.int64)
     inv = np.empty(n_orig, np.int64)
     inv[perm] = np.arange(n_orig)
     src = inv[g.src]

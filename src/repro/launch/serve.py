@@ -44,12 +44,16 @@ def serve_pagerank(mod, args):
     """Mixed query/update workload through the PPR micro-batching service."""
     from repro.serve.pagerank_service import PPRQuery
 
+    from dataclasses import replace
     cfg = mod.serve_config(smoke=args.smoke)
     if args.max_batch:
-        from dataclasses import replace
         cfg = replace(cfg, max_batch=args.max_batch)
+    if args.engine:
+        cfg = replace(cfg, engine=args.engine)
     svc = mod.make_service(cfg)
     names = svc.registry.names()
+    engines = {name: svc.registry.get(name).engine.name for name in names}
+    print(f"warm graphs + engines: {engines}")
     rng = np.random.default_rng(0)
 
     queries = []
@@ -99,6 +103,9 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--updates", type=int, default=0,
                     help="edge-update batches interleaved (pagerank only)")
+    ap.add_argument("--engine", default=None,
+                    choices=["auto", "coo", "block_ell", "fused"],
+                    help="pagerank solve-engine override (default from config)")
     args = ap.parse_args(argv)
 
     mod = get(args.arch)

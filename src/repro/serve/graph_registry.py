@@ -4,10 +4,15 @@ The registry is the serving-side owner of graph state:
 
   * every graph is registered under a name and kept device-resident
     (`DeviceGraph`) so queries never pay a host->device transfer;
+  * each registered graph carries a **solve engine** (`core.engine`), built
+    once per (graph, epoch) by `select_engine` and cached on the
+    RegisteredGraph — the micro-batcher drains every tick through it with no
+    per-tick format rebuilds. Block-ELL engines are built with power-of-two
+    slot padding so edge updates rarely change jit shapes;
   * each registered graph carries an **epoch** counter. Edge-update batches
-    (insert/delete of undirected edges) rebuild the device graph and bump
-    the epoch; result caches key on (name, epoch), so stale entries can
-    never be served after an update;
+    (insert/delete of undirected edges) rebuild the device graph + engine
+    and bump the epoch; result caches key on (name, epoch), so stale
+    entries can never be served after an update;
   * `ChebSchedule`s are precomputed per (c, tol) — the coefficient vector
     depends only on the damping factor and tolerance, not on the graph, so
     one schedule warms every graph at that operating point.
@@ -28,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.chebyshev import ChebSchedule, make_schedule
+from repro.core.engine import select_engine
 from repro.graph.ops import DeviceGraph, device_graph
 from repro.graph.structure import Graph
 
@@ -37,11 +43,14 @@ __all__ = ["RegisteredGraph", "GraphRegistry"]
 @dataclass
 class RegisteredGraph:
     """One serving graph: host copy (for rebuilds), device copy (for solves),
-    and the epoch stamped into every cache key."""
+    the solve engine picked for it, and the epoch stamped into every cache
+    key. `engine` is rebuilt with `dg` on every update, so it is always the
+    (graph, epoch)-current format — ticks reuse it as-is."""
 
     name: str
     host: Graph
     dg: DeviceGraph
+    engine: object = None
     epoch: int = 0
 
 
@@ -78,18 +87,29 @@ def _edges_to_keys(n: int, edges) -> np.ndarray:
 class GraphRegistry:
     """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache."""
 
-    def __init__(self, dtype=jnp.float32):
+    def __init__(self, dtype=jnp.float32, engine: str = "auto",
+                 batch_hint: int | None = None):
         self.dtype = dtype
+        self.engine_mode = engine
+        self.batch_hint = batch_hint  # expected micro-batch width (auto mode)
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
+
+    def _build(self, g: Graph):
+        """(DeviceGraph, engine) for one epoch of a graph. The COO engine
+        reuses the padded device graph; block-ELL engines pad their slot
+        count so the solve keeps stable jit shapes across epochs."""
+        dg = device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m))
+        eng = select_engine(g, batch=self.batch_hint, mode=self.engine_mode,
+                            dg=dg, dtype=self.dtype, stable_shapes=True)
+        return dg, eng
 
     # ---- graphs -----------------------------------------------------------
     def register(self, name: str, g: Graph) -> RegisteredGraph:
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
-        rg = RegisteredGraph(
-            name=name, host=g,
-            dg=device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m)))
+        dg, eng = self._build(g)
+        rg = RegisteredGraph(name=name, host=g, dg=dg, engine=eng)
         self._graphs[name] = rg
         return rg
 
@@ -120,8 +140,7 @@ class GraphRegistry:
             keys = np.union1d(keys, _edges_to_keys(n, insert))
         g_new = Graph.from_undirected_edges(n, keys // n, keys % n)
         rg.host = g_new
-        rg.dg = device_graph(g_new, self.dtype,
-                             pad_edges_to=_edge_bucket(g_new.m))
+        rg.dg, rg.engine = self._build(g_new)
         rg.epoch += 1
         return rg
 

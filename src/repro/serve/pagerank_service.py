@@ -9,8 +9,10 @@ core per tick):
   * queries (graph name, seed set, c, tol, top_k) land in a FIFO queue;
   * every `tick()` packs the oldest compatible group — same graph and same
     (c, tol) operating point — into an [n, B] personalization matrix and
-    drains it through ONE jitted `cpaa_fixed` call: B queries cost one
-    batched MXU pass instead of B separate solves;
+    drains it through ONE jitted `cpaa_fixed` call on the graph's cached
+    solve engine (COO segment-sum or block-ELL Pallas SpMM, picked by the
+    registry per epoch — never rebuilt on the tick path): B queries cost
+    one batched MXU pass instead of B separate solves;
   * batch widths are padded up to power-of-two buckets so XLA compiles a
     handful of shapes once and every later tick reuses them;
   * results come back as ranked top-k vertex lists (lax.top_k on device),
@@ -66,9 +68,11 @@ class PPRResult:
 
 
 @partial(jax.jit, static_argnames=("rounds", "k"))
-def _solve_topk(dg, coeffs: jax.Array, p: jax.Array, rounds: int, k: int):
-    """One micro-batch: [n, B] personalization -> ([B, k] ids, [B, k] mass)."""
-    pi, _ = cpaa_fixed(dg, coeffs, p, rounds=rounds)
+def _solve_topk(engine, coeffs: jax.Array, p: jax.Array, rounds: int, k: int):
+    """One micro-batch: [n, B] personalization -> ([B, k] ids, [B, k] mass).
+    `engine` is the registry's per-(graph, epoch) solve engine; it owns any
+    vertex reordering internally, so top-k ids are original vertex ids."""
+    pi, _ = cpaa_fixed(engine, coeffs, p, rounds=rounds)
     scores, idx = jax.lax.top_k(pi.T, k)
     return idx.astype(jnp.int32), scores
 
@@ -188,7 +192,7 @@ class PageRankService:
         p[:, len(live):] = 1.0  # pad columns: uniform mass, discarded
 
         k = min(self.max_top_k, n)
-        idx, scores = _solve_topk(rg.dg, coeffs, jnp.asarray(p),
+        idx, scores = _solve_topk(rg.engine, coeffs, jnp.asarray(p),
                                   rounds=sched.rounds, k=k)
         idx = np.asarray(idx)
         scores = np.asarray(scores)
