@@ -1,0 +1,120 @@
+"""Benchmark regression gate for CI.
+
+Compares the fresh `engine_compare` records of a `benchmarks.run --json`
+output against the committed baseline (BENCH_pagerank.json) and fails when
+any (family, B, engine) entry slowed down by more than --threshold.
+
+CI runners and dev machines differ in absolute speed, so by default each
+entry's new/old time ratio is normalized by the MEDIAN ratio across all
+entries before the threshold is applied: a uniform machine-speed shift
+cancels out, and only entries that regressed relative to the rest of the
+suite trip the gate (--normalize none compares raw ratios). Entries present
+on only one side are reported but never fail the gate — families and
+engines come and go — and entries whose baseline time sits below --min-us
+are jitter-dominated and only informational.
+
+Escape hatch: a `[bench-skip]` marker in the commit message (or whatever is
+passed via --commit-msg; CI passes the PR title for pull requests) skips the
+check entirely — for commits that knowingly trade speed for correctness.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_new.json
+    python benchmarks/check_regression.py \
+        --old BENCH_pagerank.json --new BENCH_new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import subprocess
+import sys
+
+SKIP_MARKER = "[bench-skip]"
+
+
+def _load_entries(path: str) -> dict[tuple, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    out = {}
+    for rec in payload.get("engine_compare", []):
+        out[(rec["family"], rec["B"], rec["engine"])] = rec["us_per_solve"]
+    return out
+
+
+def _commit_message() -> str:
+    try:
+        return subprocess.run(["git", "log", "-1", "--format=%B"],
+                              capture_output=True, text=True,
+                              timeout=30).stdout
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--old", required=True, help="committed baseline JSON")
+    ap.add_argument("--new", required=True, help="fresh benchmark JSON")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional slowdown (default 0.25)")
+    ap.add_argument("--normalize", choices=("median", "none"),
+                    default="median",
+                    help="divide each ratio by the suite-wide median ratio "
+                         "(cancels machine-speed differences; default)")
+    ap.add_argument("--min-us", type=float, default=8000.0,
+                    help="entries whose baseline time is below this are "
+                         "jitter-dominated: reported but never failed "
+                         "(default 8000us)")
+    ap.add_argument("--commit-msg", default=None,
+                    help="text to scan for the [bench-skip] marker "
+                         "(default: git log -1)")
+    args = ap.parse_args(argv)
+
+    msg = args.commit_msg if args.commit_msg is not None else _commit_message()
+    if SKIP_MARKER in msg:
+        print(f"{SKIP_MARKER} found in commit message — skipping the "
+              f"benchmark regression gate")
+        return 0
+
+    old = _load_entries(args.old)
+    new = _load_entries(args.new)
+    shared = sorted(set(old) & set(new))
+    if not shared:
+        print(f"no shared engine_compare entries between {args.old} and "
+              f"{args.new}; nothing to gate")
+        return 0
+    for key in sorted(set(old) ^ set(new)):
+        side = "baseline only" if key in old else "fresh only"
+        print(f"note: entry {key} is {side}; ignored")
+
+    ratios = {k: new[k] / old[k] for k in shared}
+    norm = statistics.median(ratios.values()) if args.normalize == "median" \
+        else 1.0
+    print(f"{len(shared)} entries; median new/old ratio {norm:.3f} "
+          f"(normalize={args.normalize}, threshold +{args.threshold:.0%})")
+
+    failures = []
+    for key in shared:
+        rel = ratios[key] / norm
+        if rel <= 1.0 + args.threshold:
+            status = "ok"
+        elif old[key] < args.min_us:
+            status = "info"   # too fast to time reliably; never gates
+        else:
+            status = "FAIL"
+        print(f"  {status:4s} {key[0]:<12s} B={key[1]:<4d} {key[2]:<16s} "
+              f"{old[key]:>10.1f} -> {new[key]:>10.1f} us  "
+              f"(x{ratios[key]:.2f}, normalized x{rel:.2f})")
+        if status == "FAIL":
+            failures.append(key)
+
+    if failures:
+        print(f"\nbenchmark regression: {len(failures)} entries slowed "
+              f"down >{args.threshold:.0%} vs {args.old}: {failures}\n"
+              f"(commit with {SKIP_MARKER} in the message to bypass)")
+        return 1
+    print("benchmark regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,7 +33,7 @@ def main(argv=None) -> None:
 
     import jax
     from benchmarks import (engine_bench, kernels_bench, paper_tables,
-                            serve_pagerank_bench)
+                            serve_pagerank_bench, sharded_bench)
 
     sections: dict[str, list] = {}
     _emit(sections, "theory_check (paper §4.2 claims)",
@@ -47,6 +47,11 @@ def main(argv=None) -> None:
     # section CI tracks from every push
     eng_rows, eng_records = engine_bench.engine_compare(quick=quick)
     _emit(sections, "engine_compare_cpaa_end_to_end", eng_rows)
+
+    # sharded engines across simulated device counts (subprocesses: the
+    # device count is locked at jax init, so each count re-inits jax)
+    sh_rows, sh_records = sharded_bench.sharded_compare(quick=quick)
+    _emit(sections, "sharded_compare_1d_2d_vs_single", sh_rows)
 
     if not quick:
         _emit(sections, "figure3_err_vs_rounds (NACA0015 stand-in)",
@@ -73,6 +78,7 @@ def main(argv=None) -> None:
                 "jax": jax.__version__,
             },
             "engine_compare": eng_records,
+            "sharded_compare": sh_records,
             "sections": sections,
         }
         with open(args.json, "w") as f:

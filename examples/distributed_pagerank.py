@@ -1,6 +1,11 @@
 """Distributed CPAA across a device mesh — the paper's Algorithm 1 with the
 vertex-to-thread assignment replaced by 1D/2D edge partitions + collectives.
 
+The sharded solve is an ordinary engine (`core.engine.ShardedEngine`): build
+it from a graph and hand it to `cpaa` like any other engine — the partition,
+mesh placement and column layout are owned by the engine, so the call site
+is identical to the single-device path.
+
 Run with fake devices to see the multi-device path on CPU:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -8,62 +13,42 @@ Run with fake devices to see the multi-device path on CPU:
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import cpaa, make_schedule
-from repro.core.distributed import (col_layout_perm, cpaa_distributed_1d,
-                                    cpaa_distributed_2d, pad_personalization,
-                                    put_partition_1d, put_partition_2d)
+from repro.core import (Sharded1DEngine, Sharded2DEngine, cpaa, factor_grid,
+                        make_schedule, select_engine)
 from repro.graph import generators
 from repro.graph.ops import device_graph
-from repro.graph.partition import partition_1d, partition_2d
 
 
 def main():
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
+    if n_dev == 1:
+        print("single device — run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the real demo")
     g = generators.paper_dataset("delaunay-n21", scale=0.5)
     print(f"graph: n={g.n}, m={g.m}")
     sched = make_schedule(0.85, 1e-6)
     pi_ref = np.asarray(cpaa(device_graph(g), schedule=sched).pi, np.float64)
 
-    if n_dev == 1:
-        print("single device — run with XLA_FLAGS="
-              "--xla_force_host_platform_device_count=8 for the real demo")
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        grid = (1, 1)
-    else:
-        mesh = jax.make_mesh((2, n_dev // 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        grid = (2, n_dev // 2)
-
     # ---- 1D row partition (paper-faithful decomposition)
-    part = partition_1d(g, n_dev, lane=8)
-    arrs = put_partition_1d(part, mesh, ("data", "model"))
-    solve = cpaa_distributed_1d(mesh, ("data", "model"), part, sched)
-    p = jax.device_put(pad_personalization(np.ones(g.n, np.float32), part.n),
-                       NamedSharding(mesh, P(("data", "model"))))
-    pi = np.asarray(solve(p, *arrs), np.float64)[:g.n]
-    print(f"1D distributed CPAA: max rel err vs single-device "
-          f"{np.max(np.abs(pi - pi_ref) / pi_ref):.2e} "
-          f"({part.edges_per_dev} edges/device)")
+    eng1 = Sharded1DEngine.from_graph(g, lane=8)
+    pi1 = np.asarray(cpaa(eng1, schedule=sched).pi, np.float64)
+    print(f"1D sharded engine:   max rel err vs single-device "
+          f"{np.max(np.abs(pi1 - pi_ref) / pi_ref):.2e} "
+          f"({eng1.src.shape[1]} edges/device)")
 
     # ---- 2D grid partition (beyond-paper: O(n) -> O(n/R + n/C) comm)
-    part2 = partition_2d(g, grid, lane=8)
-    arrs2 = put_partition_2d(part2, mesh, "data", "model")
-    solve2 = cpaa_distributed_2d(mesh, "data", "model", part2, sched)
-    perm = col_layout_perm(part2.n, part2.grid)
-    p2 = jax.device_put(
-        pad_personalization(np.ones(g.n, np.float32), part2.n)[perm],
-        NamedSharding(mesh, P("model")))
-    pi_col = np.asarray(solve2(p2, *arrs2), np.float64)
-    pi2 = np.empty(part2.n)
-    pi2[perm] = pi_col
-    print(f"2D distributed CPAA: max rel err vs single-device "
-          f"{np.max(np.abs(pi2[:g.n] - pi_ref) / pi_ref):.2e} "
-          f"(grid {part2.grid}, {part2.edges_per_dev} edges/device)")
+    grid = factor_grid(n_dev)
+    eng2 = Sharded2DEngine.from_graph(g, grid=grid, lane=8)
+    pi2 = np.asarray(cpaa(eng2, schedule=sched).pi, np.float64)
+    print(f"2D sharded engine:   max rel err vs single-device "
+          f"{np.max(np.abs(pi2 - pi_ref) / pi_ref):.2e} "
+          f"(grid {grid}, {eng2.src_local.shape[2]} edges/device)")
+
+    # ---- what the heuristic would do for a graph this size
+    auto = select_engine(g, lane=8)
+    print(f"select_engine(auto) on {n_dev} device(s) picks: {auto.name}")
 
 
 if __name__ == "__main__":

@@ -33,10 +33,17 @@ C = 0.85
 TOL = 1e-3
 LANE = 128
 IMBALANCE = 1.15   # per-device edge-count padding factor
-# single-device solve-engine format ("auto" | "coo" | "block_ell" | "fused");
-# the distributed dry-run cells partition the COO edge list regardless, but
-# smoke_run and local solves route through core/engine.select_engine.
+# solve-engine format ("auto" | "coo" | "block_ell" | "fused" |
+# "sharded-1d" | "sharded-2d"); the distributed dry-run cells build their
+# partition from the SHAPES table regardless, but smoke_run and local solves
+# route through core/engine.select_engine — "auto" shards when the process
+# has >= 2 devices and the graph clears the collective-amortization bar.
 ENGINE = "auto"
+# sharded-engine mesh knobs for smoke_run/local solves: (R, C) grid for
+# sharded-2d (None = most-square factorization of the device count) and the
+# partition padding lane.
+MESH_GRID = None
+PARTITION_LANE = 128
 
 SHAPES = {
     "pr_mesh_67m": dict(kind="pagerank", n=1 << 26, deg=6.0, batch=None,
@@ -102,7 +109,8 @@ def abstract_partition_2d(n_orig: int, m: int, grid) -> _AbstractPart2D:
 
 def full_config():
     return {"c": C, "tol": TOL, "rounds": make_schedule(C, TOL).rounds,
-            "engine": ENGINE}
+            "engine": ENGINE, "mesh_grid": MESH_GRID,
+            "partition_lane": PARTITION_LANE}
 
 
 def smoke_config():
@@ -192,7 +200,7 @@ def smoke_run(seed: int = 0):
     from repro.core import cpaa, select_engine, true_pagerank_dense
     from repro.graph import generators
     g = generators.tri_mesh(9, 11)
-    eng = select_engine(g, mode=ENGINE)
+    eng = select_engine(g, mode=ENGINE, grid=MESH_GRID, lane=PARTITION_LANE)
     pi = np.asarray(cpaa(eng, C, 1e-8).pi, np.float64)
     pi_true = true_pagerank_dense(g, C)
     return {"max_rel_err": jnp.float32(np.max(np.abs(pi - pi_true) / pi_true)),

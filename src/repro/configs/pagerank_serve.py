@@ -28,9 +28,15 @@ class PPRServeConfig:
     max_batch: int = 32
     cache_capacity: int = 4096
     max_top_k: int = 16
-    # solve-engine format: "auto" (fill-rate heuristic), "coo", "block_ell",
-    # or "fused" — see core/engine.select_engine and docs/performance.md
+    # solve-engine format: "auto" (device-count + fill-rate heuristic),
+    # "coo", "block_ell", "fused", "sharded-1d" or "sharded-2d" — see
+    # core/engine.select_engine and docs/performance.md
     engine: str = "auto"
+    # sharded-engine mesh shape: (R, C) grid for sharded-2d (None = most-
+    # square factorization of the device count) and the partition padding
+    # lane (vertex chunks are padded to multiples of devices * lane)
+    mesh_grid: tuple[int, int] | None = None
+    partition_lane: int = 128
 
 
 def full_config() -> PPRServeConfig:
@@ -53,7 +59,9 @@ def make_service(cfg: PPRServeConfig):
     """Registry with every configured graph warm + the service over it."""
     from repro.serve.graph_registry import GraphRegistry
     from repro.serve.pagerank_service import PageRankService
-    reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch)
+    reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch,
+                        grid=cfg.mesh_grid,
+                        partition_lane=cfg.partition_lane)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
     svc = PageRankService(reg, max_batch=cfg.max_batch,

@@ -15,7 +15,11 @@ from repro.core.engine import (
     BlockEllEngine,
     CooEngine,
     FusedBlockEllEngine,
+    Sharded1DEngine,
+    Sharded2DEngine,
+    ShardedEngine,
     as_engine,
+    factor_grid,
     select_engine,
 )
 from repro.core.pagerank import (
@@ -33,6 +37,7 @@ __all__ = [
     "make_schedule", "power_rounds_for_tolerance", "rounds_for_tolerance",
     "sigma_c", "PageRankResult", "cpaa", "cpaa_fixed", "forward_push",
     "monte_carlo", "power", "true_pagerank_dense",
-    "CooEngine", "BlockEllEngine", "FusedBlockEllEngine", "as_engine",
+    "CooEngine", "BlockEllEngine", "FusedBlockEllEngine", "ShardedEngine",
+    "Sharded1DEngine", "Sharded2DEngine", "as_engine", "factor_grid",
     "select_engine",
 ]

@@ -21,10 +21,17 @@ SpMV with explicit collectives (shard_map):
       layout, so the recurrence iterates with no extra reshuffles.
       Collective volume/device/round ~ n/R + n/C  <<  n.
 
-Both paths run the identical Chebyshev recurrence (t'' = 2 P t' - t;
-acc += c_k t''), so the paper-faithful math is untouched — only the SpMV
-decomposition changes. Vector mode [n] is the paper baseline; matrix mode
-[n, B] is the TPU adaptation (B personalization columns feeding the MXU).
+This module owns only the SHARD-LOCAL SpMV bodies (`spmv_1d_shard`,
+`spmv_2d_shard`) and the host->device partition placement. The Chebyshev
+recurrence itself lives in exactly one place — `core.pagerank.cpaa_fixed` —
+and reaches these bodies through the `ShardedEngine` wrappers in
+`core.engine`, the same way it reaches the COO and block-ELL formats.
+`cpaa_distributed_1d`/`cpaa_distributed_2d` are kept as thin builders for
+the historical array-passing call convention (examples, dry-run configs):
+they wrap the passed shards in a ShardedEngine and run the shared solver.
+
+Vector mode [n] is the paper baseline; matrix mode [n, B] is the TPU
+adaptation (B personalization columns feeding the MXU).
 """
 from __future__ import annotations
 
@@ -34,10 +41,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.chebyshev import ChebSchedule
-from repro.distributed.sharding import shard_map_compat
 from repro.graph.partition import Partition1D, Partition2D, col_layout_perm
 
 __all__ = [
+    "spmv_1d_shard",
+    "spmv_2d_shard",
     "cpaa_distributed_1d",
     "cpaa_distributed_2d",
     "put_partition_1d",
@@ -51,6 +59,53 @@ def pad_personalization(p: np.ndarray, n_pad: int) -> np.ndarray:
     out = np.zeros((n_pad,) + p.shape[1:], p.dtype)
     out[: p.shape[0]] = p
     return out
+
+
+# ------------------------------------------------------- shard-local SpMV --
+
+def spmv_1d_shard(x_sh, src, dst_local, weight, *, axis_name, rows,
+                  comm_dtype=None):
+    """One 1D-partition SpMV on ONE shard (runs inside shard_map).
+
+    x_sh:  [rows] or [rows, B] — this device's row chunk of x.
+    src, dst_local, weight: [1, E] — this device's edge shard (global src
+    ids, chunk-local dst, 1/deg[src] with 0 on padding).
+    Returns this device's row chunk of y = P x.
+    """
+    out_dtype = x_sh.dtype
+    if comm_dtype is not None:   # compress the wire format only
+        x_sh = x_sh.astype(comm_dtype)
+    x_full = jax.lax.all_gather(x_sh, axis_name, axis=0,
+                                tiled=True).astype(out_dtype)
+    if x_sh.ndim == 1:
+        contrib = x_full[src[0]] * weight[0]
+    else:
+        contrib = x_full[src[0]] * weight[0][:, None]
+    return jax.ops.segment_sum(contrib, dst_local[0], num_segments=rows)
+
+
+def spmv_2d_shard(x_col, src_local, dst_local, weight, *, row_axis, col_axis,
+                  rows, comm_dtype=None):
+    """One 2D-partition SpMV on ONE shard (runs inside shard_map).
+
+    x_col: [n/C] or [n/C, B] — this device's column chunk (nested layout,
+    replicated down the grid column). Edge arrays are [1, 1, E].
+    Returns the updated column chunk: psum_scatter over the column axis
+    (reduction stays in the accumulation dtype), all_gather over the row
+    axis (optionally compressed to `comm_dtype` on the wire).
+    """
+    out_dtype = x_col.dtype
+    if x_col.ndim == 1:
+        contrib = x_col[src_local[0, 0]] * weight[0, 0]
+    else:
+        contrib = x_col[src_local[0, 0]] * weight[0, 0][:, None]
+    partial = jax.ops.segment_sum(contrib, dst_local[0, 0], num_segments=rows)
+    y_sub = jax.lax.psum_scatter(partial, col_axis, scatter_dimension=0,
+                                 tiled=True)   # reduction stays full precision
+    if comm_dtype is not None:
+        y_sub = y_sub.astype(comm_dtype)
+    return jax.lax.all_gather(y_sub, row_axis, axis=0,
+                              tiled=True).astype(out_dtype)
 
 
 # ---------------------------------------------------------------- 1D (row) --
@@ -69,57 +124,45 @@ def cpaa_distributed_1d(mesh: Mesh, axes, part: Partition1D,
                         sched: ChebSchedule, batched: bool = False,
                         dtype=jnp.float32, unroll: bool = False,
                         comm_dtype=None):
-    """Jitted 1D distributed CPAA.
+    """Jitted 1D distributed CPAA (historical array-passing convention).
 
     Returned fn(p, src, dst_local, weight) -> pi.
-      p:   [n] (or [n, B]) sharded P(axes) on dim 0.
+      p:   [n] (or [n, B]) sharded P(axes) on dim 0 (n = part.n, padded).
       edge arrays: [D, E] sharded P(axes) on dim 0 (from put_partition_1d).
       pi:  same sharding as p, column-normalized over the real vertices.
+
+    `batched` is retained for the historical signature only — the layout is
+    derived from p's rank at trace time. `dtype` is the compute dtype: p is
+    cast to it on entry (comm_dtype still narrows only the wire format).
+
+    The recurrence is `core.pagerank.cpaa_fixed` running on a `ShardedEngine`
+    built over the passed shards — identical math to every other engine.
     """
-    rows = part.rows_per_dev
+    from repro.core.engine import Sharded1DEngine
+    from repro.core.pagerank import cpaa_fixed
+
+    del batched  # see docstring
     coeffs = jnp.asarray(sched.coeffs, dtype)
     axis_name = axes if isinstance(axes, str) else tuple(axes)
 
-    def spmv(x_sh, src, dst_local, weight):
-        if comm_dtype is not None:   # compress the wire format only
-            x_sh = x_sh.astype(comm_dtype)
-        x_full = jax.lax.all_gather(x_sh, axis_name, axis=0,
-                                    tiled=True).astype(dtype)
-        if x_sh.ndim == 1:
-            contrib = x_full[src[0]] * weight[0]
-        else:
-            contrib = x_full[src[0]] * weight[0][:, None]
-        return jax.ops.segment_sum(contrib, dst_local[0], num_segments=rows)
-
     def solve(p_sh, src, dst_local, weight):
-        t_prev = p_sh
-        acc = coeffs[0] * t_prev
-        t_cur = spmv(p_sh, src, dst_local, weight)
-        acc = acc + coeffs[1] * t_cur
+        # n_orig == n_pad: the caller's vectors are already padded+sharded,
+        # so the engine's layout round-trip is the identity.
+        eng = Sharded1DEngine(mesh=mesh, axes=axis_name, src=src,
+                              dst_local=dst_local, weight=weight,
+                              n_orig=part.n, n_pad=part.n,
+                              rows_per_dev=part.rows_per_dev,
+                              comm_dtype=comm_dtype)
+        pi, _ = cpaa_fixed(eng, coeffs, p_sh.astype(dtype),
+                           rounds=sched.rounds, unroll=unroll)
+        return pi
 
-        def body(carry, ck):
-            t_prev, t_cur, acc = carry
-            t_next = 2.0 * spmv(t_cur, src, dst_local, weight) - t_prev
-            return (t_cur, t_next, acc + ck * t_next), 0.0
-
-        (_, _, acc), _ = jax.lax.scan(
-            body, (t_prev, t_cur, acc), coeffs[2:],
-            unroll=max(1, len(sched.coeffs) - 2) if unroll else 1)
-        total = jax.lax.psum(jnp.sum(acc, axis=0), axis_name)
-        return acc / total
-
-    vec_spec = P(axes, None) if batched else P(axes)
-    edge_spec = P(axes)
-    return jax.jit(shard_map_compat(
-        solve, mesh=mesh,
-        in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
-        out_specs=vec_spec,
-    ))
+    return jax.jit(solve)
 
 
 # --------------------------------------------------------------- 2D (grid) --
 
-def put_partition_2d(part: Partition2D, mesh: Mesh, row_axis: str,
+def put_partition_2d(part: Partition2D, mesh: Mesh, row_axis,
                      col_axis: str):
     spec = P(row_axis, col_axis)
     shard = NamedSharding(mesh, spec)
@@ -130,67 +173,40 @@ def put_partition_2d(part: Partition2D, mesh: Mesh, row_axis: str,
     )
 
 
-def cpaa_distributed_2d(mesh: Mesh, row_axis: str, col_axis: str,
+def cpaa_distributed_2d(mesh: Mesh, row_axis, col_axis: str,
                         part: Partition2D, sched: ChebSchedule,
                         batched: bool = False, dtype=jnp.float32,
                         unroll: bool = False, comm_dtype=None):
-    """Jitted 2D distributed CPAA (see module docstring).
+    """Jitted 2D distributed CPAA (historical array-passing convention).
 
     Returned fn(p_col, src_local, dst_local, weight) -> pi_col.
       p_col: [n] (or [n, B]) in COLUMN layout (original[col_layout_perm]),
              sharded P(col_axis) on dim 0 (replicated over row_axis).
       edge arrays: [R, C, E] sharded P(row_axis, col_axis).
       pi_col: same layout/sharding; invert with argsort(col_layout_perm).
-    """
-    rows = part.rows_per_chunk
-    coeffs = jnp.asarray(sched.coeffs, dtype)
 
-    def spmv(x_col, src_local, dst_local, weight):
-        if x_col.ndim == 1:
-            contrib = x_col[src_local[0, 0]] * weight[0, 0]
-        else:
-            contrib = x_col[src_local[0, 0]] * weight[0, 0][:, None]
-        partial = jax.ops.segment_sum(contrib, dst_local[0, 0],
-                                      num_segments=rows)
-        y_sub = jax.lax.psum_scatter(partial, col_axis, scatter_dimension=0,
-                                     tiled=True)   # reduction stays f32
-        if comm_dtype is not None:
-            y_sub = y_sub.astype(comm_dtype)
-        return jax.lax.all_gather(y_sub, row_axis, axis=0,
-                                  tiled=True).astype(dtype)
+    `batched` / `dtype` follow the 1D builder's convention (see above).
+
+    Like the 1D builder, this wraps the shards in a `ShardedEngine` (with
+    perm=None: vectors stay in column layout end to end) and runs the one
+    shared recurrence, `core.pagerank.cpaa_fixed`.
+    """
+    from repro.core.engine import Sharded2DEngine
+    from repro.core.pagerank import cpaa_fixed
+
+    del batched  # see docstring
+    coeffs = jnp.asarray(sched.coeffs, dtype)
+    row_ax = row_axis if isinstance(row_axis, str) else tuple(row_axis)
 
     def solve(p_col, src_local, dst_local, weight):
-        # p_col is replicated over row_axis but the spmv output formally
-        # varies over it (psum_scatter) — promote so the scan carry types
-        # match (values stay replicated).
-        row_axes = row_axis if isinstance(row_axis, tuple) else (row_axis,)
-        pcast = getattr(jax.lax, "pcast", None)
-        if pcast is not None:  # older jax (check_rep=False) doesn't track vma
-            p_col = pcast(p_col, row_axes, to="varying")
-        t_prev = p_col
-        acc = coeffs[0] * t_prev
-        t_cur = spmv(p_col, src_local, dst_local, weight)
-        acc = acc + coeffs[1] * t_cur
+        eng = Sharded2DEngine(mesh=mesh, row_axis=row_ax, col_axis=col_axis,
+                              src_local=src_local, dst_local=dst_local,
+                              weight=weight, perm=None, inv_perm=None,
+                              n_orig=part.n, n_pad=part.n,
+                              rows_per_chunk=part.rows_per_chunk,
+                              comm_dtype=comm_dtype)
+        pi, _ = cpaa_fixed(eng, coeffs, p_col.astype(dtype),
+                           rounds=sched.rounds, unroll=unroll)
+        return pi
 
-        def body(carry, ck):
-            t_prev, t_cur, acc = carry
-            t_next = 2.0 * spmv(t_cur, src_local, dst_local, weight) - t_prev
-            return (t_cur, t_next, acc + ck * t_next), 0.0
-
-        (_, _, acc), _ = jax.lax.scan(
-            body, (t_prev, t_cur, acc), coeffs[2:],
-            unroll=max(1, len(sched.coeffs) - 2) if unroll else 1)
-        # acc is replicated over row_axis; reduce over column chunks only.
-        total = jax.lax.psum(jnp.sum(acc, axis=0), col_axis)
-        return acc / total
-
-    vec_spec = P(col_axis, None) if batched else P(col_axis)
-    edge_spec = P(row_axis, col_axis)
-    # check_vma=False: the output IS replicated over row_axis by construction
-    # (the final all_gather along row_axis makes every row group identical),
-    # but the varying-axis type system can't prove it through psum_scatter.
-    return jax.jit(shard_map_compat(
-        solve, mesh=mesh,
-        in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
-        out_specs=vec_spec, check_vma=False,
-    ))
+    return jax.jit(solve)

@@ -17,6 +17,14 @@ not an algorithm choice, so it lives behind an `Engine`:
                          SpMM with the fused `cheb_step` kernel (one VMEM
                          pass for the recurrence + accumulation: 5nB bytes
                          per round instead of 8nB).
+  * ShardedEngine      — the paper's Algorithm 1 vertex-set decomposition on
+                         a device mesh (`core.distributed` shard_map bodies):
+                         `Sharded1DEngine` owns a 1D row partition (all-gather
+                         x per round, ~n floats/device), `Sharded2DEngine` an
+                         (R, C) grid partition (psum_scatter + all_gather,
+                         ~n/R + n/C floats/device). The engine owns the mesh,
+                         the partition placement, and (2D) the nested column
+                         layout, so callers see original vertex ids.
 
 Engines are registered pytrees, so they pass through `jax.jit`/`lax.scan`
 like the DeviceGraph they replace. Solvers call:
@@ -26,18 +34,29 @@ like the DeviceGraph they replace. Solvers call:
     t, acc = eng.cheb_round(y, t, acc, ck)   # per round: vector work
     pi = eng.from_internal(acc)    # once per solve: layout out
 
-`select_engine(g, batch)` picks a format by fill-rate: block-ELL pays off
-when the BxB tiles are dense enough that the dense-tile flops beat the
+`select_engine(g, batch)` picks a format host-side: with multiple devices
+and a graph big enough to amortize the per-round collectives it shards
+(2D grid when the mesh has >= 4 devices and n clears the 2D bar, 1D row
+otherwise); on a single device it picks by tile fill-rate — block-ELL pays
+off when the BxB tiles are dense enough that the dense-tile flops beat the
 gather/scatter traffic of segment_sum (community and mesh-like graphs);
 scattered graphs (kmer chains, power-law hubs) stay on COO.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.distributed import (put_partition_1d, put_partition_2d,
+                                    spmv_1d_shard, spmv_2d_shard)
+from repro.distributed.sharding import shard_map_compat
 from repro.graph.ops import DeviceGraph, device_graph, spmm, spmv
+from repro.graph.partition import (col_layout_perm, partition_1d,
+                                   partition_2d)
 from repro.graph.structure import (BlockEll, Graph, block_fill_rate,
                                    build_block_ell)
 from repro.kernels.bsr_spmm.ops import bsr_spmm
@@ -47,12 +66,17 @@ __all__ = [
     "CooEngine",
     "BlockEllEngine",
     "FusedBlockEllEngine",
+    "ShardedEngine",
+    "Sharded1DEngine",
+    "Sharded2DEngine",
     "as_engine",
     "select_engine",
+    "factor_grid",
     "ENGINE_MODES",
 ]
 
-ENGINE_MODES = ("auto", "coo", "block_ell", "fused")
+ENGINE_MODES = ("auto", "coo", "block_ell", "fused", "sharded_1d",
+                "sharded_2d")
 
 
 def _default_cheb_round(y, t, acc, ck):
@@ -216,6 +240,251 @@ class FusedBlockEllEngine(BlockEllEngine):
                          use_kernel=self.use_kernel, interpret=self.interpret)
 
 
+def _take_devices(n_dev: int | None):
+    devs = jax.devices()
+    if n_dev is None:
+        return devs
+    if n_dev > len(devs):
+        raise ValueError(f"asked for {n_dev} devices, only {len(devs)} exist")
+    return devs[:n_dev]
+
+
+def factor_grid(n_dev: int) -> tuple[int, int]:
+    """Most-square (R, C) with R * C == n_dev and R <= C (wider column axis
+    keeps the all-gathered sub-chunks small): 8 -> (2, 4), 16 -> (4, 4)."""
+    r = int(math.isqrt(n_dev))
+    while n_dev % r:
+        r -= 1
+    return (r, n_dev // r)
+
+
+class ShardedEngine:
+    """Shared surface of the mesh-sharded engines (see module docstring).
+
+    Both variants keep the solve vectors GLOBAL jax arrays carrying a
+    sharding constraint; only `apply` drops into shard_map (the
+    `core.distributed` shard-local SpMV bodies), so the Chebyshev recurrence
+    and normalization in `cpaa_fixed` run unchanged on sharded carries and
+    XLA partitions the O(n) vector work across the mesh for free.
+    """
+
+    def cheb_round(self, y, t, acc, ck):
+        return _default_cheb_round(y, t, acc, ck)
+
+    @property
+    def n(self) -> int:
+        return self.n_orig
+
+    @property
+    def dtype(self):
+        return self.weight.dtype
+
+    def _constrain(self, x: jax.Array, spec) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+@jax.tree_util.register_pytree_node_class
+class Sharded1DEngine(ShardedEngine):
+    """Row-partitioned CPAA engine (the paper-faithful decomposition).
+
+    Device d owns every edge whose dst falls in row-chunk d; each round
+    all-gathers x (~n floats per device) and computes its local rows.
+    Internal layout: the original vertex order, zero-padded to
+    n_pad = rows_per_dev * n_dev and sharded over all mesh axes on dim 0.
+    """
+
+    name = "sharded_1d"
+
+    def __init__(self, mesh: Mesh, axes, src: jax.Array, dst_local: jax.Array,
+                 weight: jax.Array, n_orig: int, n_pad: int,
+                 rows_per_dev: int, comm_dtype=None):
+        self.mesh = mesh
+        self.axes = axes if isinstance(axes, str) else tuple(axes)
+        self.src = src                 # [D, E] int32, global src ids
+        self.dst_local = dst_local     # [D, E] int32, chunk-local dst
+        self.weight = weight           # [D, E] f32, 1/deg[src] (0 on padding)
+        self.n_orig = n_orig
+        self.n_pad = n_pad
+        self.rows_per_dev = rows_per_dev
+        self.comm_dtype = None if comm_dtype is None else jnp.dtype(comm_dtype)
+
+    @classmethod
+    def from_graph(cls, g: Graph, mesh: Mesh | None = None,
+                   n_dev: int | None = None, lane: int = 128,
+                   dtype=jnp.float32, comm_dtype=None) -> "Sharded1DEngine":
+        if mesh is None:
+            devs = _take_devices(n_dev)
+            mesh = Mesh(np.asarray(devs), ("dev",))
+        axes = tuple(mesh.axis_names)
+        part = partition_1d(g, int(mesh.devices.size), lane=lane)
+        src, dst_local, weight = put_partition_1d(part, mesh, axes)
+        if weight.dtype != jnp.dtype(dtype):
+            weight = weight.astype(dtype)
+        return cls(mesh=mesh, axes=axes, src=src, dst_local=dst_local,
+                   weight=weight, n_orig=g.n, n_pad=part.n,
+                   rows_per_dev=part.rows_per_dev, comm_dtype=comm_dtype)
+
+    def _vec_spec(self, ndim: int):
+        return P(self.axes, *([None] * (ndim - 1)))
+
+    def to_internal(self, x: jax.Array) -> jax.Array:
+        pad = self.n_pad - x.shape[0]
+        if pad:
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        return self._constrain(x, self._vec_spec(x.ndim))
+
+    def from_internal(self, x: jax.Array) -> jax.Array:
+        return x[: self.n_orig] if self.n_orig != self.n_pad else x
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        vec_spec = self._vec_spec(x.ndim)
+        edge_spec = P(self.axes)
+
+        def body(x_sh, src, dst_local, weight):
+            return spmv_1d_shard(x_sh, src, dst_local, weight,
+                                 axis_name=self.axes, rows=self.rows_per_dev,
+                                 comm_dtype=self.comm_dtype)
+
+        fn = shard_map_compat(
+            body, mesh=self.mesh,
+            in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
+            out_specs=vec_spec)
+        return fn(x, self.src, self.dst_local, self.weight)
+
+    def tree_flatten(self):
+        children = (self.src, self.dst_local, self.weight)
+        aux = (self.mesh, self.axes, self.n_orig, self.n_pad,
+               self.rows_per_dev, self.comm_dtype)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mesh, axes, n_orig, n_pad, rows_per_dev, comm_dtype = aux
+        return cls(mesh, axes, *children, n_orig=n_orig, n_pad=n_pad,
+                   rows_per_dev=rows_per_dev, comm_dtype=comm_dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+class Sharded2DEngine(ShardedEngine):
+    """Grid-partitioned CPAA engine (beyond-paper collective optimization).
+
+    Device (r, c) owns edges with dst in row-chunk r and src in nested
+    column group c; per round the partial row results are reduce-scattered
+    along the grid row (~n/R floats) and the new column chunks all-gathered
+    down the grid column (~n/C floats) — see `graph.partition.Partition2D`.
+
+    Internal layout: the nested COLUMN layout, `padded(x)[perm]` with
+    perm = col_layout_perm(n_pad, grid), sharded P(col_axis) on dim 0
+    (replicated over the row axis). With perm=None (the historical
+    `cpaa_distributed_2d` convention) callers pass and receive column-layout
+    vectors themselves and to/from_internal only constrain the sharding.
+    """
+
+    name = "sharded_2d"
+
+    def __init__(self, mesh: Mesh, row_axis, col_axis: str,
+                 src_local: jax.Array, dst_local: jax.Array,
+                 weight: jax.Array, perm: jax.Array | None,
+                 inv_perm: jax.Array | None, n_orig: int, n_pad: int,
+                 rows_per_chunk: int, comm_dtype=None):
+        self.mesh = mesh
+        self.row_axis = row_axis if isinstance(row_axis, str) \
+            else tuple(row_axis)
+        self.col_axis = col_axis
+        self.src_local = src_local     # [R, C, E] int32 (col-chunk-local src)
+        self.dst_local = dst_local     # [R, C, E] int32 (row-chunk-local dst)
+        self.weight = weight           # [R, C, E] f32
+        self.perm = perm               # [n_pad] column-layout gather, or None
+        self.inv_perm = inv_perm       # [n_pad] inverse gather, or None
+        self.n_orig = n_orig
+        self.n_pad = n_pad
+        self.rows_per_chunk = rows_per_chunk
+        self.comm_dtype = None if comm_dtype is None else jnp.dtype(comm_dtype)
+
+    @classmethod
+    def from_graph(cls, g: Graph, mesh: Mesh | None = None,
+                   grid: tuple[int, int] | None = None, lane: int = 128,
+                   dtype=jnp.float32, comm_dtype=None) -> "Sharded2DEngine":
+        if mesh is None:
+            if grid is None:
+                grid = factor_grid(len(jax.devices()))
+            r, c = grid
+            devs = _take_devices(r * c)
+            mesh = Mesh(np.asarray(devs).reshape(r, c), ("row", "col"))
+            row_axis, col_axis = "row", "col"
+        else:
+            names = tuple(mesh.axis_names)
+            row_axis = names[0] if len(names) == 2 else names[:-1]
+            col_axis = names[-1]
+            if grid is None:
+                c = mesh.shape[col_axis]
+                grid = (int(mesh.devices.size) // c, c)
+        part = partition_2d(g, grid, lane=lane)
+        src_local, dst_local, weight = put_partition_2d(part, mesh, row_axis,
+                                                        col_axis)
+        if weight.dtype != jnp.dtype(dtype):
+            weight = weight.astype(dtype)
+        perm = col_layout_perm(part.n, grid)
+        inv_perm = np.argsort(perm)
+        return cls(mesh=mesh, row_axis=row_axis, col_axis=col_axis,
+                   src_local=src_local, dst_local=dst_local, weight=weight,
+                   perm=jnp.asarray(perm, jnp.int32),
+                   inv_perm=jnp.asarray(inv_perm, jnp.int32),
+                   n_orig=g.n, n_pad=part.n,
+                   rows_per_chunk=part.rows_per_chunk, comm_dtype=comm_dtype)
+
+    def _vec_spec(self, ndim: int):
+        return P(self.col_axis, *([None] * (ndim - 1)))
+
+    def to_internal(self, x: jax.Array) -> jax.Array:
+        if self.perm is not None:
+            pad = self.n_pad - x.shape[0]
+            if pad:
+                x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+            x = x[self.perm]
+        return self._constrain(x, self._vec_spec(x.ndim))
+
+    def from_internal(self, x: jax.Array) -> jax.Array:
+        if self.inv_perm is None:
+            return x
+        return x[self.inv_perm][: self.n_orig]
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        vec_spec = self._vec_spec(x.ndim)
+        edge_spec = P(self.row_axis, self.col_axis)
+
+        def body(x_col, src_local, dst_local, weight):
+            return spmv_2d_shard(x_col, src_local, dst_local, weight,
+                                 row_axis=self.row_axis,
+                                 col_axis=self.col_axis,
+                                 rows=self.rows_per_chunk,
+                                 comm_dtype=self.comm_dtype)
+
+        # check_vma=False: the output IS replicated over the row axis by
+        # construction (the final all_gather along it makes every row group
+        # identical), but the varying-axis type system can't prove that
+        # through psum_scatter.
+        fn = shard_map_compat(
+            body, mesh=self.mesh,
+            in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
+            out_specs=vec_spec, check_vma=False)
+        return fn(x, self.src_local, self.dst_local, self.weight)
+
+    def tree_flatten(self):
+        children = (self.src_local, self.dst_local, self.weight,
+                    self.perm, self.inv_perm)
+        aux = (self.mesh, self.row_axis, self.col_axis, self.n_orig,
+               self.n_pad, self.rows_per_chunk, self.comm_dtype)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mesh, row_axis, col_axis, n_orig, n_pad, rows, comm_dtype = aux
+        return cls(mesh, row_axis, col_axis, *children, n_orig=n_orig,
+                   n_pad=n_pad, rows_per_chunk=rows, comm_dtype=comm_dtype)
+
+
 def as_engine(obj) -> CooEngine | BlockEllEngine:
     """Coerce a DeviceGraph (the historical solver argument) to an engine;
     pass engines through unchanged."""
@@ -234,16 +503,29 @@ def _default_min_fill() -> float:
     return 0.01 if jax.default_backend() == "tpu" else 0.05
 
 
+# auto mode only shards graphs at least this large: below it one device's
+# SpMV is faster than any per-round collective (docs/performance.md has the
+# n vs n/R + n/C volume model the 4x multiplier for the 2D bar comes from).
+SHARDED_MIN_N = 1 << 16
+
+
 def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                   dg: DeviceGraph | None = None, dtype=jnp.float32,
                   block: int = 128, min_fill: float | None = None,
                   use_kernel: bool | None = None, interpret: bool | None = None,
-                  stable_shapes: bool = False):
+                  stable_shapes: bool = False, mesh: Mesh | None = None,
+                  grid: tuple[int, int] | None = None, lane: int = 128,
+                  comm_dtype=None, sharded_min_n: int | None = None):
     """Pick/build the solve engine for a graph (host-side, once per epoch).
 
-    mode: "coo" | "block_ell" | "fused" force a format; "auto" builds the
-    block-ELL tiling and keeps it only when its tile fill-rate clears
-    `min_fill` (dense-enough tiles to beat segment_sum) — otherwise COO.
+    mode: "coo" | "block_ell" | "fused" | "sharded_1d" | "sharded_2d" force
+    a format (dashes accepted: "sharded-1d"); "auto" first checks the device
+    axis — with >= 2 devices and g.n >= `sharded_min_n` it shards (a 2D grid
+    when >= 4 devices and the graph is big enough to amortize the two-phase
+    collectives, the paper-faithful 1D rows otherwise) — then falls back to
+    the single-device fill-rate choice: block-ELL is kept only when its tile
+    fill-rate clears `min_fill` (dense-enough tiles to beat segment_sum),
+    otherwise COO.
     batch: expected personalization width (auto mode nudges tiny batches on
     small graphs back to COO; the MXU win needs columns to amortize the
     tiling round-trip).
@@ -251,7 +533,11 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
     passes its padded, shape-stable device graph).
     stable_shapes: pad the ELL slot count to a power of two so edge updates
     rarely change jit shapes.
+    mesh / grid / lane / comm_dtype: sharded-engine knobs — an explicit mesh
+    to run on (default: all devices), the (R, C) grid for sharded_2d, the
+    partition padding lane, and an optional wire dtype for the all-gather.
     """
+    mode = mode.replace("-", "_")
     if mode not in ENGINE_MODES:
         raise ValueError(f"engine mode {mode!r} not in {ENGINE_MODES}")
 
@@ -265,6 +551,27 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
         return cls.from_graph(g, block=block, use_kernel=use_kernel,
                               interpret=interpret,
                               pad_slots_to_pow2=stable_shapes)
+    if mode == "sharded_1d":
+        return Sharded1DEngine.from_graph(g, mesh=mesh, lane=lane,
+                                          dtype=dtype, comm_dtype=comm_dtype)
+    if mode == "sharded_2d":
+        return Sharded2DEngine.from_graph(g, mesh=mesh, grid=grid, lane=lane,
+                                          dtype=dtype, comm_dtype=comm_dtype)
+
+    # auto, multi-device: shard when the graph is large enough that the
+    # per-device row work dominates the per-round collective (1D moves ~n
+    # floats/device/round; 2D ~n/R + n/C, but needs a still-larger n to
+    # amortize its two collective phases and grid padding).
+    n_dev = int(mesh.devices.size) if mesh is not None else jax.device_count()
+    thr = SHARDED_MIN_N if sharded_min_n is None else sharded_min_n
+    if n_dev >= 2 and g.n >= thr:
+        if n_dev >= 4 and g.n >= 4 * thr and \
+                (mesh is None or len(mesh.axis_names) >= 2):
+            return Sharded2DEngine.from_graph(g, mesh=mesh, grid=grid,
+                                              lane=lane, dtype=dtype,
+                                              comm_dtype=comm_dtype)
+        return Sharded1DEngine.from_graph(g, mesh=mesh, lane=lane,
+                                          dtype=dtype, comm_dtype=comm_dtype)
 
     # auto: too small to tile -> COO without paying the host-side build
     if g.n < 2 * block or (batch is not None and batch < 8 and g.n < 8 * block):

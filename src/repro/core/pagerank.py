@@ -51,15 +51,18 @@ def _uniform_p(eng) -> jax.Array:
     return jnp.ones((eng.n,), eng.dtype)
 
 
-@partial(jax.jit, static_argnames=("rounds", "keep_history"))
+@partial(jax.jit, static_argnames=("rounds", "keep_history", "unroll"))
 def cpaa_fixed(dg, coeffs: jax.Array, p: jax.Array,
-               rounds: int, keep_history: bool = False):
+               rounds: int, keep_history: bool = False,
+               unroll: bool = False):
     """CPAA with a fixed round count (jit-friendly core).
 
     dg:     DeviceGraph or Engine (see module docstring).
     coeffs: [rounds+1] with coeffs[0] already halved (= c0/2).
     p:      [n] or [n, B] personalization (need not be normalized; the final
             normalization in Algorithm 1 line 36 absorbs scaling).
+    unroll: fully unroll the round loop (the dry-run cost prober compiles
+            reduced-depth variants and needs the rounds visible in the HLO).
     """
     eng = as_engine(dg)
     t_prev = eng.to_internal(p)     # T_0(P) p
@@ -74,7 +77,9 @@ def cpaa_fixed(dg, coeffs: jax.Array, p: jax.Array,
         return (t_cur, t_next, acc), \
             (eng.from_internal(acc) if keep_history else 0.0)
 
-    (_, _, acc), hist = jax.lax.scan(body, (t_prev, t_cur, acc), coeffs[2:])
+    (_, _, acc), hist = jax.lax.scan(
+        body, (t_prev, t_cur, acc), coeffs[2:],
+        unroll=max(1, coeffs.shape[0] - 2) if unroll else 1)
     return _normalize(eng.from_internal(acc)), hist
 
 

@@ -12,8 +12,11 @@ row results are reduce-scattered along the row (over c). Collective volume
 per iteration drops from O(n) per device (1D all-gather) to O(n/R + n/C).
 
 Edges are padded per device to the max local count so the stacked arrays are
-rectangular (shard_map needs uniform shards). Padding edges point at a
-sacrificial vertex slot (n_pad - 1) with weight 0.
+rectangular (shard_map needs uniform shards). Padding edges point at the
+last local row slot (global slot n_pad - 1 of the chunk) with weight 0 and
+src 0. When n is an exact multiple of D * lane that slot is a REAL vertex,
+not a spare: correctness rests on the zero weight alone (the slot receives
+x[0] * 0), which tests/test_partition_padding.py pins down.
 """
 from __future__ import annotations
 

@@ -50,6 +50,9 @@ def serve_pagerank(mod, args):
         cfg = replace(cfg, max_batch=args.max_batch)
     if args.engine:
         cfg = replace(cfg, engine=args.engine)
+    if args.mesh_grid:
+        r, _, c = args.mesh_grid.partition("x")
+        cfg = replace(cfg, mesh_grid=(int(r), int(c)))
     svc = mod.make_service(cfg)
     names = svc.registry.names()
     engines = {name: svc.registry.get(name).engine.name for name in names}
@@ -104,8 +107,13 @@ def main(argv=None):
     ap.add_argument("--updates", type=int, default=0,
                     help="edge-update batches interleaved (pagerank only)")
     ap.add_argument("--engine", default=None,
-                    choices=["auto", "coo", "block_ell", "fused"],
+                    choices=["auto", "coo", "block_ell", "fused",
+                             "sharded-1d", "sharded-2d"],
                     help="pagerank solve-engine override (default from config)")
+    ap.add_argument("--mesh-grid", default=None, metavar="RxC",
+                    help="sharded-2d grid override, e.g. 2x4 (pagerank only; "
+                         "run under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N to simulate a mesh on CPU)")
     args = ap.parse_args(argv)
 
     mod = get(args.arch)

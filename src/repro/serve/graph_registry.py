@@ -8,7 +8,9 @@ The registry is the serving-side owner of graph state:
     once per (graph, epoch) by `select_engine` and cached on the
     RegisteredGraph — the micro-batcher drains every tick through it with no
     per-tick format rebuilds. Block-ELL engines are built with power-of-two
-    slot padding so edge updates rarely change jit shapes;
+    slot padding so edge updates rarely change jit shapes; sharded engines
+    (multi-device CPAA) build their mesh partition here, so the [n, B] query
+    batches drain through a sharded solve per tick;
   * each registered graph carries an **epoch** counter. Edge-update batches
     (insert/delete of undirected edges) rebuild the device graph + engine
     and bump the epoch; result caches key on (name, epoch), so stale
@@ -88,20 +90,31 @@ class GraphRegistry:
     """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache."""
 
     def __init__(self, dtype=jnp.float32, engine: str = "auto",
-                 batch_hint: int | None = None):
+                 batch_hint: int | None = None, mesh=None,
+                 grid: tuple[int, int] | None = None,
+                 partition_lane: int = 128):
         self.dtype = dtype
         self.engine_mode = engine
         self.batch_hint = batch_hint  # expected micro-batch width (auto mode)
+        # sharded-engine knobs: the mesh the solves run on (default: all
+        # devices), the (R, C) grid for sharded-2d, and the partition lane
+        self.mesh = mesh
+        self.grid = grid
+        self.partition_lane = partition_lane
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
 
     def _build(self, g: Graph):
         """(DeviceGraph, engine) for one epoch of a graph. The COO engine
         reuses the padded device graph; block-ELL engines pad their slot
-        count so the solve keeps stable jit shapes across epochs."""
+        count so the solve keeps stable jit shapes across epochs; sharded
+        engines rebuild their mesh partition here — per (graph, epoch), never
+        on the tick path."""
         dg = device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m))
         eng = select_engine(g, batch=self.batch_hint, mode=self.engine_mode,
-                            dg=dg, dtype=self.dtype, stable_shapes=True)
+                            dg=dg, dtype=self.dtype, stable_shapes=True,
+                            mesh=self.mesh, grid=self.grid,
+                            lane=self.partition_lane)
         return dg, eng
 
     # ---- graphs -----------------------------------------------------------

@@ -1,0 +1,98 @@
+"""Regression tests for the partition padding-edge convention.
+
+`partition_1d`/`partition_2d` pad every device's edge list to a rectangular
+[D, E_pad] by pointing the filler edges at the LAST local row slot
+(`rows - 1`, i.e. global slot n_pad - 1 of the chunk) with weight 0. When n
+is exactly a multiple of D * lane there is NO padded vertex — the
+sacrificial slot lands on a REAL vertex — so correctness rests entirely on
+the zero weight (the slot receives `x[src_pad] * 0`). These tests pin that
+contract: a real vertex occupying the sacrificial slot keeps exactly its
+correct mass, for both partitions and through the full sharded solve.
+"""
+import numpy as np
+import pytest
+
+from repro.graph.partition import partition_1d, partition_2d
+from repro.graph.structure import Graph
+
+
+def _ring(n: int) -> Graph:
+    """Cycle plus one chord: every vertex (including n-1, the sacrificial
+    slot when n == n_pad) has mass, and the chord imbalances the per-device
+    edge counts so the rectangular stacking actually emits padding edges."""
+    u = np.arange(n, dtype=np.int64)
+    return Graph.from_undirected_edges(
+        n, np.concatenate([u, [0]]), np.concatenate([(u + 1) % n, [n // 2]]))
+
+
+def _dense_p(g: Graph) -> np.ndarray:
+    a = np.zeros((g.n, g.n))
+    a[g.dst, g.src] = 1.0
+    return a / np.maximum(a.sum(0), 1.0)[None, :]
+
+
+def test_partition_1d_sacrificial_slot_keeps_mass():
+    n_dev, lane = 4, 4
+    g = _ring(n_dev * lane)              # n == D * lane -> n_pad == n exactly
+    part = partition_1d(g, n_dev, lane=lane)
+    assert part.n == g.n                 # no spare slot: rows-1 is real
+    assert np.any(part.weight == 0)      # padding edges exist
+    x = np.random.default_rng(0).random(g.n).astype(np.float64)
+    y = np.zeros(part.n)
+    rows = part.rows_per_dev
+    for d in range(part.n_dev):
+        np.add.at(y, d * rows + part.dst_local[d],
+                  x[part.src[d]] * part.weight[d].astype(np.float64))
+    expect = _dense_p(g) @ x
+    np.testing.assert_allclose(y, expect, rtol=1e-6, atol=1e-9)
+    # the sacrificial slot itself, explicitly
+    np.testing.assert_allclose(y[g.n - 1], expect[g.n - 1], rtol=1e-6)
+
+
+def test_partition_2d_sacrificial_slot_keeps_mass():
+    grid, lane = (2, 2), 4
+    g = _ring(grid[0] * grid[1] * lane)  # n == R * C * lane -> n_pad == n
+    part = partition_2d(g, grid, lane=lane)
+    assert part.n == g.n
+    assert np.any(part.weight == 0)      # padding edges exist
+    rows, sub = part.rows_per_chunk, part.sub
+    # column-chunk view of x: x_col[c] stacks the nested sub-chunks
+    x = np.random.default_rng(1).random(g.n).astype(np.float64)
+    x_col = np.empty((grid[1], part.cols_per_chunk))
+    for c in range(grid[1]):
+        for r in range(grid[0]):
+            x_col[c, r * sub:(r + 1) * sub] = \
+                x[r * rows + c * sub: r * rows + (c + 1) * sub]
+    y = np.zeros(part.n)
+    for r in range(grid[0]):
+        for c in range(grid[1]):
+            np.add.at(y, r * rows + part.dst_local[r, c],
+                      x_col[c][part.src_local[r, c]]
+                      * part.weight[r, c].astype(np.float64))
+    expect = _dense_p(g) @ x
+    np.testing.assert_allclose(y, expect, rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(y[g.n - 1], expect[g.n - 1], rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["1d", "2d"])
+def test_sharded_solve_at_exact_padding_boundary(kind):
+    """End-to-end: the sharded engines on a graph whose size hits the
+    padding boundary exactly must match the dense oracle everywhere,
+    including at vertex n-1."""
+    import jax
+    from repro.core import cpaa, true_pagerank_dense
+    from repro.core.engine import (Sharded1DEngine, Sharded2DEngine,
+                                   factor_grid)
+    n_dev = jax.device_count()
+    lane = 4
+    if kind == "1d":
+        g = _ring(n_dev * lane)
+        eng = Sharded1DEngine.from_graph(g, lane=lane)
+    else:
+        r, c = factor_grid(n_dev)
+        g = _ring(r * c * lane)
+        eng = Sharded2DEngine.from_graph(g, grid=(r, c), lane=lane)
+    assert eng.n_pad == g.n
+    pi = np.asarray(cpaa(eng, 0.85, 1e-8).pi, np.float64)
+    truth = true_pagerank_dense(g, 0.85)
+    np.testing.assert_allclose(pi, truth, rtol=5e-5, atol=1e-9)
