@@ -1,8 +1,10 @@
 """Benchmark regression gate for CI.
 
-Compares the fresh `engine_compare` records of a `benchmarks.run --json`
-output against the committed baseline (BENCH_pagerank.json) and fails when
-any (family, B, engine) entry slowed down by more than --threshold.
+Compares the fresh `engine_compare` AND `adaptive_compare` records of a
+`benchmarks.run --json` output against the committed baseline
+(BENCH_pagerank.json) and fails when any entry — keyed
+(family, B, engine) for engine_compare, (family, B, "engine/mode") for
+adaptive_compare — slowed down by more than --threshold.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -38,6 +40,10 @@ def _load_entries(path: str) -> dict[tuple, float]:
     out = {}
     for rec in payload.get("engine_compare", []):
         out[(rec["family"], rec["B"], rec["engine"])] = rec["us_per_solve"]
+    for rec in payload.get("adaptive_compare", []):
+        # "engine/mode" keeps these keys disjoint from engine_compare's
+        out[(rec["family"], rec["B"],
+             f"{rec['engine']}/{rec['mode']}")] = rec["us_per_solve"]
     return out
 
 

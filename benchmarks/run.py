@@ -32,8 +32,8 @@ def main(argv=None) -> None:
     quick = args.quick
 
     import jax
-    from benchmarks import (engine_bench, kernels_bench, paper_tables,
-                            serve_pagerank_bench, sharded_bench)
+    from benchmarks import (adaptive_bench, engine_bench, kernels_bench,
+                            paper_tables, serve_pagerank_bench, sharded_bench)
 
     sections: dict[str, list] = {}
     _emit(sections, "theory_check (paper §4.2 claims)",
@@ -47,6 +47,11 @@ def main(argv=None) -> None:
     # section CI tracks from every push
     eng_rows, eng_records = engine_bench.engine_compare(quick=quick)
     _emit(sections, "engine_compare_cpaa_end_to_end", eng_rows)
+
+    # adaptive (residual-controlled) vs fixed-round CPAA: rounds saved +
+    # wall-clock, also tracked by the regression gate from every push
+    ad_rows, ad_records = adaptive_bench.adaptive_compare(quick=quick)
+    _emit(sections, "adaptive_compare_rounds_and_time", ad_rows)
 
     # sharded engines across simulated device counts (subprocesses: the
     # device count is locked at jax init, so each count re-inits jax)
@@ -78,6 +83,7 @@ def main(argv=None) -> None:
                 "jax": jax.__version__,
             },
             "engine_compare": eng_records,
+            "adaptive_compare": ad_records,
             "sharded_compare": sh_records,
             "sections": sections,
         }

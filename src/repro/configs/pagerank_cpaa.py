@@ -44,6 +44,11 @@ ENGINE = "auto"
 # partition padding lane.
 MESH_GRID = None
 PARTITION_LANE = 128
+# residual-controlled solves: exit when the measured chunked L1 residual
+# reaches TOL instead of always running the a-priori round count (which
+# stays the hard cap); None chunk = core.chebyshev.default_chunk(C, TOL).
+ADAPTIVE = True
+ADAPTIVE_CHUNK = None
 
 SHAPES = {
     "pr_mesh_67m": dict(kind="pagerank", n=1 << 26, deg=6.0, batch=None,
@@ -110,7 +115,8 @@ def abstract_partition_2d(n_orig: int, m: int, grid) -> _AbstractPart2D:
 def full_config():
     return {"c": C, "tol": TOL, "rounds": make_schedule(C, TOL).rounds,
             "engine": ENGINE, "mesh_grid": MESH_GRID,
-            "partition_lane": PARTITION_LANE}
+            "partition_lane": PARTITION_LANE,
+            "adaptive": ADAPTIVE, "adaptive_chunk": ADAPTIVE_CHUNK}
 
 
 def smoke_config():
@@ -195,13 +201,21 @@ def build(shape: str, multi_pod: bool, _rounds: int | None = None):
 
 
 def smoke_run(seed: int = 0):
-    """CPU: CPAA on a small mesh graph vs direct solve."""
+    """CPU: CPAA (fixed + residual-controlled) on a small mesh graph vs
+    direct solve; reports the adaptive solver's round savings."""
     import numpy as np
-    from repro.core import cpaa, select_engine, true_pagerank_dense
+    from repro.core import (cpaa, cpaa_adaptive, select_engine,
+                            true_pagerank_dense)
     from repro.graph import generators
     g = generators.tri_mesh(9, 11)
     eng = select_engine(g, mode=ENGINE, grid=MESH_GRID, lane=PARTITION_LANE)
     pi = np.asarray(cpaa(eng, C, 1e-8).pi, np.float64)
     pi_true = true_pagerank_dense(g, C)
+    res_a = cpaa_adaptive(eng, C, 1e-8, chunk=ADAPTIVE_CHUNK)
+    err_a = np.max(np.abs(np.asarray(res_a.pi, np.float64) - pi_true)
+                   / pi_true)
     return {"max_rel_err": jnp.float32(np.max(np.abs(pi - pi_true) / pi_true)),
+            "adaptive_max_rel_err": jnp.float32(err_a),
+            "adaptive_rounds": jnp.float32(res_a.iterations),
+            "adaptive_rounds_bound": jnp.float32(res_a.rounds_bound),
             "loss": jnp.float32(0.0)}

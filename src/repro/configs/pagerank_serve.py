@@ -37,6 +37,12 @@ class PPRServeConfig:
     # lane (vertex chunks are padded to multiples of devices * lane)
     mesh_grid: tuple[int, int] | None = None
     partition_lane: int = 128
+    # residual-controlled ticks: exit each micro-batch solve as soon as the
+    # measured L1 residual reaches tol instead of always paying the a-priori
+    # Formula 8 round count (which stays the hard cap); adaptive_chunk
+    # overrides the residual-check period (None = default_chunk(c, tol))
+    adaptive: bool = True
+    adaptive_chunk: int | None = None
 
 
 def full_config() -> PPRServeConfig:
@@ -66,7 +72,9 @@ def make_service(cfg: PPRServeConfig):
         reg.register(name, generators.paper_dataset(dataset, scale))
     svc = PageRankService(reg, max_batch=cfg.max_batch,
                           cache_capacity=cfg.cache_capacity,
-                          max_top_k=cfg.max_top_k)
+                          max_top_k=cfg.max_top_k,
+                          adaptive=cfg.adaptive,
+                          adaptive_chunk=cfg.adaptive_chunk)
     reg.schedule(cfg.c, cfg.tol)  # precompute the coefficient vector
     return svc
 
@@ -109,4 +117,8 @@ def smoke_run(seed: int = 0):
             "cache_hit": jnp.float32(hit is not None and hit.cached),
             "epoch": jnp.float32(epoch),
             "solves": jnp.float32(svc.stats["solves"]),
+            # adaptive telemetry: rounds the residual control actually ran
+            # vs the a-priori Formula 8 budget across all ticks
+            "rounds_used": jnp.float32(svc.stats["rounds_used"]),
+            "rounds_bound": jnp.float32(svc.stats["rounds_bound"]),
             "loss": jnp.float32(0.0)}

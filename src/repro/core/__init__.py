@@ -3,8 +3,10 @@ Polynomial approximation — plus baselines and the distributed solver."""
 from repro.core.chebyshev import (
     ChebSchedule,
     beta,
+    chunk_tail_ratio,
     coefficient,
     coefficients,
+    default_chunk,
     err_bound,
     make_schedule,
     power_rounds_for_tolerance,
@@ -25,6 +27,8 @@ from repro.core.engine import (
 from repro.core.pagerank import (
     PageRankResult,
     cpaa,
+    cpaa_adaptive,
+    cpaa_adaptive_fixed,
     cpaa_fixed,
     forward_push,
     monte_carlo,
@@ -33,9 +37,11 @@ from repro.core.pagerank import (
 )
 
 __all__ = [
-    "ChebSchedule", "beta", "coefficient", "coefficients", "err_bound",
+    "ChebSchedule", "beta", "chunk_tail_ratio", "coefficient", "coefficients",
+    "default_chunk", "err_bound",
     "make_schedule", "power_rounds_for_tolerance", "rounds_for_tolerance",
-    "sigma_c", "PageRankResult", "cpaa", "cpaa_fixed", "forward_push",
+    "sigma_c", "PageRankResult", "cpaa", "cpaa_adaptive",
+    "cpaa_adaptive_fixed", "cpaa_fixed", "forward_push",
     "monte_carlo", "power", "true_pagerank_dense",
     "CooEngine", "BlockEllEngine", "FusedBlockEllEngine", "ShardedEngine",
     "Sharded1DEngine", "Sharded2DEngine", "as_engine", "factor_grid",

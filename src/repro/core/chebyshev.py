@@ -31,6 +31,8 @@ __all__ = [
     "err_bound",
     "rounds_for_tolerance",
     "power_rounds_for_tolerance",
+    "chunk_tail_ratio",
+    "default_chunk",
     "ChebSchedule",
     "make_schedule",
 ]
@@ -95,6 +97,56 @@ def rounds_for_tolerance(c: float, tol: float) -> int:
 def power_rounds_for_tolerance(c: float, tol: float) -> int:
     """Power-method analogue: residual decays as c^k; rounds for c^k < tol."""
     return max(1, int(math.ceil(math.log(tol) / math.log(c))))
+
+
+# ----------------------------------------------------- a-posteriori control --
+#
+# Formula 8 is an A-PRIORI bound: it assumes the worst spectrum (all mass at
+# x -> 1). Real graphs have a spectral gap, so the accumulator usually stops
+# moving well before the bound. The adaptive solver (core.pagerank.
+# cpaa_adaptive) runs the recurrence in chunks of R rounds and exits when the
+# normalized L1 residual between accumulator snapshots drops under tol. The
+# helpers below size R so that an exit decided from the chunk residual is
+# sound: the not-yet-accumulated geometric tail after a residual-<=-tol stop
+# is provably a small fraction of tol.
+
+
+def chunk_tail_ratio(c: float, r: int) -> float:
+    """Upper bound of (remaining tail) / (last chunk residual) after r rounds.
+
+    The chunk residual between snapshots k-r and k carries coefficient mass
+    ~ c0 beta^{k-r+1} (1 - beta^r) / (1 - beta); the tail beyond k is
+    ~ c0 beta^{k+1} / (1 - beta). Their ratio is beta^r / (1 - beta^r),
+    scaled by 1 / (1 - beta) to cover the worst-case per-mode sign
+    cancellation inside the chunk (T_k(x) oscillates; the snapshot L1 can
+    under-read the accumulated mass by up to the alternating-series factor).
+    """
+    b = beta(c)
+    return b ** r / ((1.0 - b ** r) * (1.0 - b))
+
+
+def default_chunk(c: float, tol: float | None = None, safety: float = 0.5,
+                  max_chunk: int = 8) -> int:
+    """Residual-check period R for `cpaa_adaptive`.
+
+    Smallest R with chunk_tail_ratio(c, R) <= safety (exit on a chunk
+    residual <= tol leaves a tail provably <= safety * tol), clamped to
+    [2, max_chunk] — checking every round pays an extra normalization +
+    reduction per SpMM for nothing, and a chunk beyond max_chunk delays the
+    exit more than the check costs. When `tol` is given, R is additionally
+    capped (down to 1 if need be) so at least one residual check happens
+    before the a-priori round bound is hit — at very loose tolerances the
+    bound is only a couple of rounds and a 2-round chunk would land its
+    first check exactly on the cap, disabling adaptivity.
+    """
+    r = max_chunk
+    for cand in range(2, max_chunk + 1):
+        if chunk_tail_ratio(c, cand) <= safety:
+            r = cand
+            break
+    if tol is not None:
+        r = min(r, max(1, rounds_for_tolerance(c, tol) - 1))
+    return r
 
 
 @dataclass(frozen=True)

@@ -123,7 +123,8 @@ def put_partition_1d(part: Partition1D, mesh: Mesh, axes):
 def cpaa_distributed_1d(mesh: Mesh, axes, part: Partition1D,
                         sched: ChebSchedule, batched: bool = False,
                         dtype=jnp.float32, unroll: bool = False,
-                        comm_dtype=None):
+                        comm_dtype=None, adaptive: bool = False,
+                        tol: float | None = None, chunk: int | None = None):
     """Jitted 1D distributed CPAA (historical array-passing convention).
 
     Returned fn(p, src, dst_local, weight) -> pi.
@@ -135,15 +136,25 @@ def cpaa_distributed_1d(mesh: Mesh, axes, part: Partition1D,
     derived from p's rank at trace time. `dtype` is the compute dtype: p is
     cast to it on entry (comm_dtype still narrows only the wire format).
 
+    `adaptive=True` swaps the fixed-round recurrence for the residual-
+    controlled `cpaa_adaptive_fixed` (exit when the chunked L1 residual
+    drops under `tol`, default the schedule's err_bound; the schedule's
+    round count stays the hard cap). The residual reduction runs on the
+    global sharded carries, so it is a cross-shard psum — no extra wiring.
+
     The recurrence is `core.pagerank.cpaa_fixed` running on a `ShardedEngine`
     built over the passed shards — identical math to every other engine.
     """
+    from repro.core.chebyshev import default_chunk
     from repro.core.engine import Sharded1DEngine
-    from repro.core.pagerank import cpaa_fixed
+    from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed
 
     del batched  # see docstring
     coeffs = jnp.asarray(sched.coeffs, dtype)
     axis_name = axes if isinstance(axes, str) else tuple(axes)
+    if adaptive:
+        tol = float(sched.err_bound) if tol is None else float(tol)
+        chunk = default_chunk(sched.c, tol) if chunk is None else chunk
 
     def solve(p_sh, src, dst_local, weight):
         # n_orig == n_pad: the caller's vectors are already padded+sharded,
@@ -153,6 +164,12 @@ def cpaa_distributed_1d(mesh: Mesh, axes, part: Partition1D,
                               n_orig=part.n, n_pad=part.n,
                               rows_per_dev=part.rows_per_dev,
                               comm_dtype=comm_dtype)
+        if adaptive:
+            pi, _, _, _ = cpaa_adaptive_fixed(eng, p_sh.astype(dtype),
+                                              sched.c, tol,
+                                              max_rounds=sched.rounds,
+                                              chunk=chunk)
+            return pi
         pi, _ = cpaa_fixed(eng, coeffs, p_sh.astype(dtype),
                            rounds=sched.rounds, unroll=unroll)
         return pi
@@ -176,7 +193,9 @@ def put_partition_2d(part: Partition2D, mesh: Mesh, row_axis,
 def cpaa_distributed_2d(mesh: Mesh, row_axis, col_axis: str,
                         part: Partition2D, sched: ChebSchedule,
                         batched: bool = False, dtype=jnp.float32,
-                        unroll: bool = False, comm_dtype=None):
+                        unroll: bool = False, comm_dtype=None,
+                        adaptive: bool = False, tol: float | None = None,
+                        chunk: int | None = None):
     """Jitted 2D distributed CPAA (historical array-passing convention).
 
     Returned fn(p_col, src_local, dst_local, weight) -> pi_col.
@@ -185,18 +204,23 @@ def cpaa_distributed_2d(mesh: Mesh, row_axis, col_axis: str,
       edge arrays: [R, C, E] sharded P(row_axis, col_axis).
       pi_col: same layout/sharding; invert with argsort(col_layout_perm).
 
-    `batched` / `dtype` follow the 1D builder's convention (see above).
+    `batched` / `dtype` / `adaptive` / `tol` / `chunk` follow the 1D
+    builder's convention (see above).
 
     Like the 1D builder, this wraps the shards in a `ShardedEngine` (with
     perm=None: vectors stay in column layout end to end) and runs the one
     shared recurrence, `core.pagerank.cpaa_fixed`.
     """
+    from repro.core.chebyshev import default_chunk
     from repro.core.engine import Sharded2DEngine
-    from repro.core.pagerank import cpaa_fixed
+    from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed
 
     del batched  # see docstring
     coeffs = jnp.asarray(sched.coeffs, dtype)
     row_ax = row_axis if isinstance(row_axis, str) else tuple(row_axis)
+    if adaptive:
+        tol = float(sched.err_bound) if tol is None else float(tol)
+        chunk = default_chunk(sched.c, tol) if chunk is None else chunk
 
     def solve(p_col, src_local, dst_local, weight):
         eng = Sharded2DEngine(mesh=mesh, row_axis=row_ax, col_axis=col_axis,
@@ -205,6 +229,12 @@ def cpaa_distributed_2d(mesh: Mesh, row_axis, col_axis: str,
                               n_orig=part.n, n_pad=part.n,
                               rows_per_chunk=part.rows_per_chunk,
                               comm_dtype=comm_dtype)
+        if adaptive:
+            pi, _, _, _ = cpaa_adaptive_fixed(eng, p_col.astype(dtype),
+                                              sched.c, tol,
+                                              max_rounds=sched.rounds,
+                                              chunk=chunk)
+            return pi
         pi, _ = cpaa_fixed(eng, coeffs, p_col.astype(dtype),
                            rounds=sched.rounds, unroll=unroll)
         return pi

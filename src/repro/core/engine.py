@@ -34,6 +34,16 @@ like the DeviceGraph they replace. Solvers call:
     t, acc = eng.cheb_round(y, t, acc, ck)   # per round: vector work
     pi = eng.from_internal(acc)    # once per solve: layout out
 
+Mass invariant (every engine honors it; the adaptive solver depends on it):
+the internal layout is a permutation of the caller's vertices plus ZERO-mass
+padding rows that stay zero through every `apply`/`cheb_round`, so column
+sums and L1 norms computed directly on internal-layout arrays equal the
+external ones. `cpaa_adaptive_fixed` exploits this to run its residual
+control entirely inside the internal layout — one code path for COO,
+block-ELL and the sharded engines, whose global (sharding-constrained)
+arrays additionally make the residual reductions lower to cross-shard
+psums for free.
+
 `select_engine(g, batch)` picks a format host-side: with multiple devices
 and a graph big enough to amortize the per-round collectives it shards
 (2D grid when the mesh has >= 4 devices and n clears the 2D bar, 1D row

@@ -53,6 +53,10 @@ def serve_pagerank(mod, args):
     if args.mesh_grid:
         r, _, c = args.mesh_grid.partition("x")
         cfg = replace(cfg, mesh_grid=(int(r), int(c)))
+    if args.adaptive is not None:
+        cfg = replace(cfg, adaptive=args.adaptive)
+    if args.adaptive_chunk is not None:
+        cfg = replace(cfg, adaptive_chunk=args.adaptive_chunk)
     svc = mod.make_service(cfg)
     names = svc.registry.names()
     engines = {name: svc.registry.get(name).engine.name for name in names}
@@ -91,6 +95,12 @@ def serve_pagerank(mod, args):
           f"{st['solves']} batched solves for {st['solved_queries']} queries "
           f"(avg B={st['solved_queries'] / max(st['solves'], 1):.1f}), "
           f"{st['cache_hits']} cache hits, {st['updates']} graph updates")
+    mode = "adaptive (residual-controlled)" if svc.adaptive else "fixed"
+    saved = st["rounds_bound"] - st["rounds_used"]
+    pct = 100.0 * saved / max(st["rounds_bound"], 1)
+    print(f"rounds [{mode}]: {st['rounds_used']} used vs "
+          f"{st['rounds_bound']} a-priori bound "
+          f"({saved} saved, {pct:.0f}%)")
     print(f"cache: {svc.cache.stats()}")
 
 
@@ -114,6 +124,16 @@ def main(argv=None):
                     help="sharded-2d grid override, e.g. 2x4 (pagerank only; "
                          "run under XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N to simulate a mesh on CPU)")
+    ap.add_argument("--adaptive", dest="adaptive", action="store_true",
+                    default=None,
+                    help="residual-controlled ticks: stop each micro-batch "
+                         "solve at tol instead of the a-priori round bound "
+                         "(pagerank only; default from config)")
+    ap.add_argument("--fixed-rounds", dest="adaptive", action="store_false",
+                    help="always run the a-priori round count per tick")
+    ap.add_argument("--adaptive-chunk", type=int, default=None,
+                    help="rounds between residual checks in adaptive mode "
+                         "(default: sized from (c, tol))")
     args = ap.parse_args(argv)
 
     mod = get(args.arch)

@@ -17,7 +17,12 @@ The registry is the serving-side owner of graph state:
     entries can never be served after an update;
   * `ChebSchedule`s are precomputed per (c, tol) — the coefficient vector
     depends only on the damping factor and tolerance, not on the graph, so
-    one schedule warms every graph at that operating point.
+    one schedule warms every graph at that operating point. Schedules also
+    come in an **adaptive mode** (`adaptive_schedule`): the same a-priori
+    round count, but consumed as a hard CAP by the residual-controlled
+    `cpaa_adaptive_fixed`, plus the residual-check chunk size — the
+    micro-batcher's per-tick round count then drops to whatever the
+    measured residual demands instead of always paying the Formula 8 bound.
 
 Host-side rebuild cost is O(m log m) (numpy set ops on the canonical
 undirected edge keys); for the mesh-sized graphs this service targets that
@@ -34,12 +39,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.chebyshev import ChebSchedule, make_schedule
+from repro.core.chebyshev import ChebSchedule, default_chunk, make_schedule
 from repro.core.engine import select_engine
 from repro.graph.ops import DeviceGraph, device_graph
 from repro.graph.structure import Graph
 
-__all__ = ["RegisteredGraph", "GraphRegistry"]
+__all__ = ["AdaptiveSchedule", "RegisteredGraph", "GraphRegistry"]
+
+
+@dataclass(frozen=True)
+class AdaptiveSchedule:
+    """Operating point of one residual-controlled solve.
+
+    max_rounds is the a-priori Formula 8 round count — the adaptive solver
+    treats it as a hard cap, so an adaptive tick can never run more rounds
+    than a fixed-round tick at the same (c, tol); chunk is the residual-
+    check period (see core.chebyshev.default_chunk).
+    """
+
+    c: float
+    tol: float
+    max_rounds: int
+    chunk: int
 
 
 @dataclass
@@ -103,6 +124,7 @@ class GraphRegistry:
         self.partition_lane = partition_lane
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
+        self._adaptive: dict[tuple[float, float, int | None], AdaptiveSchedule] = {}
 
     def _build(self, g: Graph):
         """(DeviceGraph, engine) for one epoch of a graph. The COO engine
@@ -165,3 +187,17 @@ class GraphRegistry:
             sched = make_schedule(c, tol)
             self._schedules[key] = (sched, jnp.asarray(sched.coeffs, self.dtype))
         return self._schedules[key]
+
+    def adaptive_schedule(self, c: float, tol: float,
+                          chunk: int | None = None) -> AdaptiveSchedule:
+        """Adaptive-mode schedule for (c, tol): the a-priori round count as
+        the hard cap plus the residual-check chunk (default sized by
+        `default_chunk`). Cached like the fixed-round schedules."""
+        key = (float(c), float(tol), chunk)
+        if key not in self._adaptive:
+            sched, _ = self.schedule(c, tol)
+            self._adaptive[key] = AdaptiveSchedule(
+                c=float(c), tol=float(tol), max_rounds=sched.rounds,
+                chunk=default_chunk(float(c), float(tol)) if chunk is None
+                else int(chunk))
+        return self._adaptive[key]

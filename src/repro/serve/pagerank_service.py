@@ -13,6 +13,12 @@ core per tick):
     solve engine (COO segment-sum or block-ELL Pallas SpMM, picked by the
     registry per epoch — never rebuilt on the tick path): B queries cost
     one batched MXU pass instead of B separate solves;
+  * with `adaptive=True` the tick solves through the residual-controlled
+    `cpaa_adaptive_fixed` instead: per-query columns that converge stop
+    feeding the SpMM, and the tick exits as soon as the measured L1
+    residual of every live column reaches tol — never past the a-priori
+    Formula 8 round bound, which stays the hard cap. The stats counters
+    `rounds_used` / `rounds_bound` record the per-tick savings;
   * batch widths are padded up to power-of-two buckets so XLA compiles a
     handful of shapes once and every later tick reuses them;
   * results come back as ranked top-k vertex lists (lax.top_k on device),
@@ -33,7 +39,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.pagerank import cpaa_fixed
+from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed
 from repro.serve.graph_registry import GraphRegistry
 from repro.serve.result_cache import ResultCache
 
@@ -77,16 +83,39 @@ def _solve_topk(engine, coeffs: jax.Array, p: jax.Array, rounds: int, k: int):
     return idx.astype(jnp.int32), scores
 
 
+@partial(jax.jit, static_argnames=("max_rounds", "chunk", "k"))
+def _solve_topk_adaptive(engine, p: jax.Array, c, tol, max_rounds: int,
+                         chunk: int, k: int):
+    """Adaptive micro-batch: like _solve_topk, but the round count is
+    residual-controlled per column — converged query columns stop feeding
+    the SpMM, and the tick ends as soon as every live column reaches tol
+    (never past the a-priori `max_rounds` cap). Also returns the rounds
+    actually run (scalar max over columns) for the service telemetry."""
+    pi, rounds_used, _, _ = cpaa_adaptive_fixed(engine, p, c, tol,
+                                                max_rounds=max_rounds,
+                                                chunk=chunk)
+    scores, idx = jax.lax.top_k(pi.T, k)
+    return idx.astype(jnp.int32), scores, rounds_used
+
+
 class PageRankService:
     """Query queue + micro-batcher + result cache over a GraphRegistry."""
 
     def __init__(self, registry: GraphRegistry, max_batch: int = 32,
-                 cache_capacity: int = 4096, max_top_k: int = 16):
+                 cache_capacity: int = 4096, max_top_k: int = 16,
+                 adaptive: bool = False, adaptive_chunk: int | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.registry = registry
         self.max_batch = max_batch
         self.max_top_k = max_top_k
+        # adaptive=True: every tick solves through the residual-controlled
+        # core — rounds per tick drop to what the measured residual demands
+        # (never above the a-priori bound); adaptive_chunk overrides the
+        # residual-check period (None = default_chunk(c, tol) per operating
+        # point)
+        self.adaptive = adaptive
+        self.adaptive_chunk = adaptive_chunk
         self.cache = ResultCache(cache_capacity)
         self._pending: deque[PPRQuery] = deque()
         self._results: dict[int, PPRResult] = {}
@@ -97,9 +126,12 @@ class PageRankService:
             self._buckets.append(b)
             b *= 2
         self._buckets.append(max_batch)
+        # rounds_used / rounds_bound: per-tick rounds actually run vs the
+        # a-priori Formula 8 count — equal on the fixed path, rounds_used <=
+        # rounds_bound when adaptive
         self.stats = {"queries": 0, "cache_hits": 0, "solves": 0,
                       "solved_queries": 0, "ticks": 0, "padded_columns": 0,
-                      "updates": 0}
+                      "updates": 0, "rounds_used": 0, "rounds_bound": 0}
 
     # ---- submission -------------------------------------------------------
     def submit(self, q: PPRQuery) -> PPRResult | None:
@@ -192,8 +224,18 @@ class PageRankService:
         p[:, len(live):] = 1.0  # pad columns: uniform mass, discarded
 
         k = min(self.max_top_k, n)
-        idx, scores = _solve_topk(rg.engine, coeffs, jnp.asarray(p),
-                                  rounds=sched.rounds, k=k)
+        if self.adaptive:
+            plan = self.registry.adaptive_schedule(live[0].c, live[0].tol,
+                                                   chunk=self.adaptive_chunk)
+            idx, scores, used = _solve_topk_adaptive(
+                rg.engine, jnp.asarray(p), plan.c, plan.tol,
+                max_rounds=plan.max_rounds, chunk=plan.chunk, k=k)
+            self.stats["rounds_used"] += int(used)
+        else:
+            idx, scores = _solve_topk(rg.engine, coeffs, jnp.asarray(p),
+                                      rounds=sched.rounds, k=k)
+            self.stats["rounds_used"] += sched.rounds
+        self.stats["rounds_bound"] += sched.rounds
         idx = np.asarray(idx)
         scores = np.asarray(scores)
         self.stats["solves"] += 1

@@ -1,10 +1,13 @@
 """LRU cache for ranked PPR query results.
 
-Keys are (graph name, graph epoch, seed tuple, c, tol): the epoch makes
-every edge-update batch an implicit cache flush for that graph — a stale
-entry's key can never be constructed again. `invalidate_graph` additionally
-purges the dead entries eagerly so capacity isn't wasted on unreachable
-keys.
+Keys are (graph name, graph epoch, seed tuple, c, tol) tuples — the first
+element MUST be the graph name; the cache maintains a per-graph key index on
+it. The epoch makes every edge-update batch an implicit cache flush for that
+graph — a stale entry's key can never be constructed again.
+`invalidate_graph` additionally purges the dead entries eagerly so capacity
+isn't wasted on unreachable keys; thanks to the per-graph index that purge
+is O(entries for that graph), not a full O(capacity) dict scan, so
+high-churn graphs (frequent edge-update batches) don't stall the tick loop.
 
 Values are (indices, scores) arrays of the service-level max_top_k; queries
 asking for a smaller k slice the cached arrays, so one entry serves every
@@ -21,6 +24,10 @@ class ResultCache:
     def __init__(self, capacity: int):
         self.capacity = int(capacity)
         self._d: OrderedDict = OrderedDict()
+        # graph name -> set of live keys for it (kept exactly in sync with
+        # _d by put/eviction/invalidation; the O(1)-per-key invalidation
+        # index)
+        self._by_graph: dict = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -42,19 +49,29 @@ class ResultCache:
             self.misses += 1
         return None
 
+    def _index_discard(self, key) -> None:
+        live = self._by_graph.get(key[0])
+        if live is not None:
+            live.discard(key)
+            if not live:
+                del self._by_graph[key[0]]
+
     def put(self, key, value) -> None:
         if self.capacity <= 0:
             return
         if key in self._d:
             self._d.move_to_end(key)
+        else:
+            self._by_graph.setdefault(key[0], set()).add(key)
         self._d[key] = value
         while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            dead, _ = self._d.popitem(last=False)
+            self._index_discard(dead)
             self.evictions += 1
 
     def invalidate_graph(self, graph: str) -> int:
         """Drop every entry for `graph` (any epoch). Returns the count."""
-        dead = [k for k in self._d if k[0] == graph]
+        dead = self._by_graph.pop(graph, ())
         for k in dead:
             del self._d[k]
         self.invalidations += len(dead)

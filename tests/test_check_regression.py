@@ -79,3 +79,29 @@ def test_raw_mode_catches_uniform_slowdown(tmp_path):
     new = {k: v * 1.5 for k, v in BASE.items()}
     r = _run(tmp_path, BASE, new, "--normalize", "none")
     assert r.returncode == 1, r.stdout
+
+
+def test_adaptive_compare_entries_are_gated(tmp_path):
+    """adaptive_compare records join the gate keyed (family, B,
+    engine/mode) — disjoint from engine_compare keys by construction."""
+    def payload(slow: float):
+        return {
+            "engine_compare": [{"family": "mesh", "B": 1, "engine": "coo",
+                                "us_per_solve": 50000.0}],
+            "adaptive_compare": [
+                {"family": "mesh", "B": 1, "engine": "coo", "mode": "fixed",
+                 "us_per_solve": 40000.0},
+                {"family": "mesh", "B": 1, "engine": "coo",
+                 "mode": "adaptive", "us_per_solve": 20000.0 * slow},
+            ],
+        }
+    import json
+    po, pn = tmp_path / "o.json", tmp_path / "n.json"
+    po.write_text(json.dumps(payload(1.0)))
+    pn.write_text(json.dumps(payload(2.0)))   # adaptive entry regressed 2x
+    import subprocess, sys
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1, r.stdout
+    assert "coo/adaptive" in r.stdout

@@ -119,6 +119,65 @@ def test_monte_carlo_correlates_on_skewed_graph():
     assert corr > 0.97, corr
 
 
+def test_monte_carlo_terminates_at_isolated_vertices():
+    """Degree-0 vertices have no CSR edge range: a walk reaching one must
+    terminate there instead of stepping through ANOTHER vertex's edges (the
+    deg-0 offset used to land the pick inside a neighbour's slot range)."""
+    base = generators.powerlaw_ba(80, 3, seed=1)   # skewed: rankable by MC
+    n = base.n + 3                            # 3 isolated vertices at the end
+    g = Graph.from_undirected_edges(n, base.src, base.dst,
+                                    add_self_loops_to_isolated=False)
+    iso = [base.n, base.n + 1, base.n + 2]
+    assert all(g.deg[v] == 0 for v in iso)
+    walks = 64
+    res = monte_carlo(device_graph(g), walks_per_node=walks, max_len=60,
+                      seed=3)
+    pi = np.asarray(res.pi)
+    assert np.all(np.isfinite(pi)) and pi.sum() == pytest.approx(1.0, abs=1e-5)
+    # every walk that starts at an isolated vertex stops there, and no walk
+    # from elsewhere can reach it: its mass is exactly walks/total
+    for v in iso:
+        assert pi[v] == pytest.approx(walks / (n * walks), rel=1e-6)
+    # the connected part still tracks the dense oracle
+    pi_true = true_pagerank_dense(base, 0.85)
+    corr = np.corrcoef(pi[: base.n], pi_true)[0, 1]
+    assert corr > 0.9, corr
+
+
+def test_monte_carlo_edgeless_graph_is_uniform():
+    g = Graph.from_undirected_edges(7, np.array([], np.int64),
+                                    np.array([], np.int64),
+                                    add_self_loops_to_isolated=False)
+    pi = np.asarray(monte_carlo(device_graph(g)).pi)
+    np.testing.assert_allclose(pi, 1.0 / 7, rtol=1e-6)
+
+
+def test_default_personalization_is_unit_mass_for_all_solvers():
+    """The normalization contract: every solver's default personalization is
+    uniform with mass 1, so keep_history accumulators (and any intermediate
+    mass readings) are directly comparable across solvers."""
+    from repro.core import cpaa_adaptive
+    from repro.core.pagerank import _uniform_p
+    from repro.core.engine import as_engine
+    g = generators.tri_mesh(9, 11)
+    dg = device_graph(g)
+    p = _uniform_p(as_engine(dg))
+    assert float(jnp.sum(p)) == pytest.approx(1.0, rel=1e-6)
+    explicit = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+    for solver in (lambda **kw: cpaa(dg, 0.85, 1e-8, **kw),
+                   lambda **kw: cpaa_adaptive(dg, 0.85, 1e-8, **kw),
+                   lambda **kw: power(dg, 0.85, tol=1e-10, **kw),
+                   lambda **kw: forward_push(dg, 0.85, rounds=40, **kw)):
+        np.testing.assert_allclose(np.asarray(solver().pi),
+                                   np.asarray(solver(p=explicit).pi),
+                                   rtol=1e-6, atol=1e-9)
+    # the history of a default solve is normalized-mass (approaches 1/(1-c)
+    # before the final normalization) — pinned so solvers stay comparable
+    hist = cpaa(dg, 0.85, 1e-8, keep_history=True).history
+    total = float(jnp.sum(hist[-1]))
+    assert total == pytest.approx(1.0 / (1.0 - 0.85), rel=1e-3)
+
+
 # ---------- hypothesis property tests over random undirected graphs ----------
 
 @st.composite

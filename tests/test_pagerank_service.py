@@ -103,6 +103,103 @@ class TestCache:
         assert svc.submit(PPRQuery(qid=10, graph="g", seeds=(0,))) is None
 
 
+class TestResultCacheIndex:
+    """The per-graph key index behind O(entries-for-that-graph)
+    invalidation: it must stay exactly in sync with the LRU dict through
+    puts, updates, evictions and invalidations, and the hit/miss/eviction/
+    invalidation counters must stay exact through the churn."""
+
+    def _check_index(self, cache):
+        from itertools import chain
+        indexed = set(chain.from_iterable(cache._by_graph.values()))
+        assert indexed == set(cache._d)
+        for graph, keys in cache._by_graph.items():
+            assert keys and all(k[0] == graph for k in keys)
+
+    def test_counters_exact_through_churn(self):
+        from repro.serve.result_cache import ResultCache
+        cache = ResultCache(capacity=4)
+        # 6 puts over 2 graphs -> 2 evictions (the 2 oldest "a" keys)
+        for i in range(3):
+            cache.put(("a", 0, (i,)), i)
+        for i in range(3):
+            cache.put(("b", 0, (i,)), i)
+        self._check_index(cache)
+        assert len(cache) == 4 and cache.evictions == 2
+        assert cache.get(("a", 0, (0,))) is None        # evicted -> miss
+        assert cache.get(("a", 0, (2,))) == 2           # survivor -> hit
+        assert cache.get(("b", 0, (1,))) == 1
+        assert (cache.hits, cache.misses) == (2, 1)
+        # duplicate put must not double-index
+        cache.put(("b", 0, (1,)), 99)
+        self._check_index(cache)
+        assert len(cache) == 4 and cache.get(("b", 0, (1,))) == 99
+        # invalidation drops exactly graph-b entries, counts them, and
+        # leaves graph-a untouched
+        dropped = cache.invalidate_graph("b")
+        assert dropped == 3 and cache.invalidations == 3
+        self._check_index(cache)
+        assert len(cache) == 1 and cache.get(("a", 0, (2,))) == 2
+        # invalidating an absent graph is a counted no-op
+        assert cache.invalidate_graph("nope") == 0
+        assert cache.invalidations == 3
+        assert cache.stats() == {"size": 1, "capacity": 4, "hits": 4,
+                                 "misses": 1, "evictions": 2,
+                                 "invalidations": 3}
+
+    def test_index_survives_eviction_of_a_graphs_last_key(self):
+        from repro.serve.result_cache import ResultCache
+        cache = ResultCache(capacity=1)
+        cache.put(("a", 0, (1,)), 1)
+        cache.put(("b", 0, (1,)), 2)    # evicts a's only key
+        self._check_index(cache)
+        assert "a" not in cache._by_graph
+        assert cache.invalidate_graph("a") == 0
+
+    def test_service_invalidation_uses_index(self):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        for i in range(5):
+            svc.submit(PPRQuery(qid=i, graph="g", seeds=(i,)))
+        svc.run_until_drained()
+        assert len(svc.cache) == 5
+        svc.update_graph("g", insert=[(0, 90)])
+        assert len(svc.cache) == 0 and svc.cache.invalidations == 5
+        assert svc.cache._by_graph == {}
+
+
+class TestZeroColumnGuard:
+    def test_zero_personalization_column_cannot_poison_the_cache(self):
+        """An all-zero column reaching the batched solve (an empty or fully-
+        filtered seed set) must come back as finite zeros — NOT NaNs that
+        would be cached and served. Exercised through the service's own
+        jitted solve paths (fixed and adaptive)."""
+        import jax.numpy as jnp
+        from repro.serve.pagerank_service import (_solve_topk,
+                                                  _solve_topk_adaptive)
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g)
+        rg = svc.registry.get("g")
+        sched, coeffs = svc.registry.schedule(0.85, 1e-4)
+        p = np.zeros((g.n, 2), np.float32)
+        p[7, 0] = 1.0                       # live query; column 1 all-zero
+        idx, scores = _solve_topk(rg.engine, coeffs, jnp.asarray(p),
+                                  rounds=sched.rounds, k=4)
+        assert np.all(np.isfinite(np.asarray(scores)))
+        np.testing.assert_array_equal(np.asarray(scores)[1], 0.0)
+        plan = svc.registry.adaptive_schedule(0.85, 1e-4)
+        idx_a, scores_a, used = _solve_topk_adaptive(
+            rg.engine, jnp.asarray(p), plan.c, plan.tol,
+            max_rounds=plan.max_rounds, chunk=plan.chunk, k=4)
+        assert np.all(np.isfinite(np.asarray(scores_a)))
+        np.testing.assert_array_equal(np.asarray(scores_a)[1], 0.0)
+        assert int(used) <= plan.max_rounds
+        # the live column is unaffected by its dead neighbour
+        ref_idx, ref_scores = reference_topk(g, (7,), 0.85, 1e-4, 4)
+        np.testing.assert_allclose(np.asarray(scores)[0], ref_scores,
+                                   rtol=1e-5, atol=1e-6)
+
+
 class TestDynamicUpdates:
     def test_update_bumps_epoch_and_invalidates(self):
         g = generators.tri_mesh(9, 11)

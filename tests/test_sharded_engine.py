@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import Mesh
 
-from repro.core import cpaa, cpaa_fixed, make_schedule, true_pagerank_dense
+from repro.core import (cpaa, cpaa_adaptive, cpaa_fixed, make_schedule,
+                        true_pagerank_dense)
 from repro.core.engine import (CooEngine, Sharded1DEngine, Sharded2DEngine,
                                factor_grid, select_engine)
 from repro.graph import generators
@@ -84,6 +85,88 @@ class TestShardedParity:
         b = np.asarray(power(device_graph(g), 0.85, tol=1e-12,
                              max_iter=2000).pi)
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-8)
+
+
+class TestAdaptiveSharded:
+    """Residual-controlled CPAA on the mesh-sharded engines: the residual
+    reduction is a cross-shard psum (the solve vectors are global sharded
+    arrays), so parity with the single-device adaptive solve — and the
+    a-priori round cap — must hold on every mesh shape."""
+
+    @pytest.mark.parametrize("n_dev", DEV_COUNTS)
+    @pytest.mark.parametrize("kind", ["1d", "2d"])
+    @pytest.mark.parametrize("gname", sorted(GRAPHS))
+    def test_vector_matches_coo_and_cap(self, gname, kind, n_dev):
+        g = GRAPHS[gname]()
+        eng = _engine(kind, g, n_dev)
+        res = cpaa_adaptive(eng, 0.85, 1e-8)
+        ref = cpaa_adaptive(CooEngine(device_graph(g)), 0.85, 1e-8)
+        pi = np.asarray(res.pi, np.float64)
+        assert pi.shape == (g.n,)
+        assert np.abs(pi - np.asarray(ref.pi, np.float64)).sum() <= 1e-5
+        truth = true_pagerank_dense(g, 0.85)
+        assert np.max(np.abs(pi - truth) / truth) < 5e-5
+        assert res.iterations <= res.rounds_bound
+        assert res.iterations == ref.iterations  # same exit round everywhere
+
+    @pytest.mark.parametrize("n_dev", DEV_COUNTS)
+    @pytest.mark.parametrize("kind", ["1d", "2d"])
+    def test_batched_matches_coo_with_column_masks(self, kind, n_dev):
+        g = GRAPHS["mesh"]()
+        eng = _engine(kind, g, n_dev)
+        rng = np.random.default_rng(5)
+        B = 4
+        p = np.zeros((g.n, B), np.float32)
+        p[:, 0] = 1.0 / g.n             # broad column: converges early
+        for j in range(1, B):
+            p[rng.choice(g.n, rng.integers(1, 4), replace=False), j] = 1.0
+        res = cpaa_adaptive(eng, 0.85, 1e-8, p=jnp.asarray(p))
+        ref = cpaa_adaptive(CooEngine(device_graph(g)), 0.85, 1e-8,
+                            p=jnp.asarray(p))
+        np.testing.assert_allclose(np.asarray(res.pi), np.asarray(ref.pi),
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_array_equal(res.column_rounds, ref.column_rounds)
+        assert int(res.column_rounds.max()) <= res.rounds_bound
+
+    @pytest.mark.parametrize("kind", ["1d", "2d"])
+    def test_distributed_builders_adaptive_mode(self, kind):
+        """The historical array-passing builders accept adaptive=True and
+        agree with the fixed-round builders at the same operating point."""
+        from repro.core.distributed import (cpaa_distributed_1d,
+                                            cpaa_distributed_2d,
+                                            col_layout_perm,
+                                            pad_personalization,
+                                            put_partition_1d,
+                                            put_partition_2d)
+        from repro.graph.partition import partition_1d, partition_2d
+        g = GRAPHS["mesh"]()
+        n_dev = min(2, jax.device_count())
+        sched = make_schedule(0.85, 1e-8)
+        if kind == "1d":
+            mesh = Mesh(_devices(n_dev), ("dev",))
+            part = partition_1d(g, n_dev, lane=4)
+            arrs = put_partition_1d(part, mesh, ("dev",))
+            p = pad_personalization(np.full(g.n, 1.0 / g.n, np.float32),
+                                    part.n)
+            fn_a = cpaa_distributed_1d(mesh, ("dev",), part, sched,
+                                       adaptive=True)
+            fn_f = cpaa_distributed_1d(mesh, ("dev",), part, sched)
+            pi_a = np.asarray(fn_a(p, *arrs), np.float64)[: g.n]
+            pi_f = np.asarray(fn_f(p, *arrs), np.float64)[: g.n]
+        else:
+            r, c = factor_grid(n_dev)
+            mesh = Mesh(_devices(n_dev).reshape(r, c), ("row", "col"))
+            part = partition_2d(g, (r, c), lane=4)
+            arrs = put_partition_2d(part, mesh, "row", "col")
+            perm = col_layout_perm(part.n, part.grid)
+            p_col = pad_personalization(
+                np.full(g.n, 1.0 / g.n, np.float32), part.n)[perm]
+            fn_a = cpaa_distributed_2d(mesh, "row", "col", part, sched,
+                                       adaptive=True)
+            fn_f = cpaa_distributed_2d(mesh, "row", "col", part, sched)
+            pi_a = np.asarray(fn_a(p_col, *arrs), np.float64)
+            pi_f = np.asarray(fn_f(p_col, *arrs), np.float64)
+        assert np.abs(pi_a - pi_f).sum() <= 1e-5
 
 
 class TestShardedLayout:
