@@ -1,10 +1,12 @@
 """Benchmark regression gate for CI.
 
-Compares the fresh `engine_compare` AND `adaptive_compare` records of a
-`benchmarks.run --json` output against the committed baseline
+Compares the fresh `engine_compare`, `adaptive_compare` AND `update_churn`
+records of a `benchmarks.run --json` output against the committed baseline
 (BENCH_pagerank.json) and fails when any entry — keyed
 (family, B, engine) for engine_compare, (family, B, "engine/mode") for
-adaptive_compare — slowed down by more than --threshold.
+adaptive_compare, (family, batch_edges, "update/mode") for update_churn
+(per-batch update latency, so update-path regressions gate like solve
+regressions) — slowed down by more than --threshold.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -44,6 +46,10 @@ def _load_entries(path: str) -> dict[tuple, float]:
         # "engine/mode" keeps these keys disjoint from engine_compare's
         out[(rec["family"], rec["B"],
              f"{rec['engine']}/{rec['mode']}")] = rec["us_per_solve"]
+    for rec in payload.get("update_churn", []):
+        # per-batch update latency; B is the batch's edge count here
+        out[(rec["family"], rec["B"],
+             f"update-{rec['engine']}/{rec['mode']}")] = rec["us_per_update"]
     return out
 
 
@@ -70,6 +76,13 @@ def main(argv=None) -> int:
                     help="entries whose baseline time is below this are "
                          "jitter-dominated: reported but never failed "
                          "(default 8000us)")
+    ap.add_argument("--min-us-update", type=float, default=1000.0,
+                    help="jitter floor for update_churn entries (default "
+                         "1000us): per-batch update latency is steadier "
+                         "than micro-solves AND the fast (incremental) "
+                         "path sits well under the solve floor — without "
+                         "its own floor the tentpole path would never "
+                         "gate")
     ap.add_argument("--commit-msg", default=None,
                     help="text to scan for the [bench-skip] marker "
                          "(default: git log -1)")
@@ -101,9 +114,11 @@ def main(argv=None) -> int:
     failures = []
     for key in shared:
         rel = ratios[key] / norm
+        floor = args.min_us_update if key[2].startswith("update") \
+            else args.min_us
         if rel <= 1.0 + args.threshold:
             status = "ok"
-        elif old[key] < args.min_us:
+        elif old[key] < floor:
             status = "info"   # too fast to time reliably; never gates
         else:
             status = "FAIL"

@@ -33,7 +33,8 @@ def main(argv=None) -> None:
 
     import jax
     from benchmarks import (adaptive_bench, engine_bench, kernels_bench,
-                            paper_tables, serve_pagerank_bench, sharded_bench)
+                            paper_tables, serve_pagerank_bench, sharded_bench,
+                            update_churn_bench)
 
     sections: dict[str, list] = {}
     _emit(sections, "theory_check (paper §4.2 claims)",
@@ -57,6 +58,11 @@ def main(argv=None) -> None:
     # device count is locked at jax init, so each count re-inits jax)
     sh_rows, sh_records = sharded_bench.sharded_compare(quick=quick)
     _emit(sections, "sharded_compare_1d_2d_vs_single", sh_rows)
+
+    # edge-update churn: incremental patch vs full rebuild per batch, cache
+    # retention under selective invalidation — gated like solve regressions
+    uc_rows, uc_records = update_churn_bench.update_churn(quick=quick)
+    _emit(sections, "update_churn_incremental_vs_rebuild", uc_rows)
 
     if not quick:
         _emit(sections, "figure3_err_vs_rounds (NACA0015 stand-in)",
@@ -85,6 +91,7 @@ def main(argv=None) -> None:
             "engine_compare": eng_records,
             "adaptive_compare": ad_records,
             "sharded_compare": sh_records,
+            "update_churn": uc_records,
             "sections": sections,
         }
         with open(args.json, "w") as f:

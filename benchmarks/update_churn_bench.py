@@ -1,0 +1,199 @@
+"""Update-path churn benchmark: sustained edge insert/delete batches.
+
+    PYTHONPATH=src python -m benchmarks.update_churn_bench [--quick]
+
+What a high-churn serving deployment pays per edge-update batch, measured
+on the community family (caveman cliques — the locality class where
+selective invalidation has the most to retain):
+
+  * **us_per_apply** — wall time of `GraphRegistry.apply_updates` alone:
+    what applying the batch to the graph + engine costs, incremental
+    (in-place device patch + engine refresh) vs rebuild (host set ops +
+    from_undirected_edges + fresh engine). The in-bucket incremental path
+    is the headline: it skips the O(m log m) host rebuild AND the BFS
+    reorder that dominates block-ELL engine rebuilds.
+  * **us_per_update** — wall time of one full `update_graph` call: apply +
+    hop-mask computation + selective invalidation + refresh queueing. The
+    invalidation side is identical work in both modes, so this is the
+    end-to-end number a serving deployment sees per batch.
+  * **retention** — fraction of cached results that survive an update
+    under selective invalidation (radius-2 hop mask around the delta's
+    touched vertices); the blanket path retains 0.
+  * **qps_churn** — queries/sec of a mixed workload that interleaves query
+    micro-batches with update batches, i.e. what churn does to serving
+    throughput end to end.
+  * **parity_l1** — L1 distance between a solve on the churned
+    (incrementally patched) state and a from-scratch rebuild of the same
+    final edge set: the delta path must not drift.
+
+Half the batches stay inserted and half round-trip (insert then delete),
+so the final edge set differs from the initial one and the parity check is
+non-trivial. Batches are sized to stay inside the power-of-two edge
+bucket — the bucket-overflow fallback is covered by tests, not timed here.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.graph import generators
+from repro.graph.structure import Graph
+from repro.serve import GraphRegistry, PageRankService, PPRQuery
+
+
+def _non_edge_batches(g, n_batches: int, batch_edges: int, seed: int = 0):
+    """Disjoint batches of vertex pairs that are not edges of g (and not
+    edges of any other batch)."""
+    rng = np.random.default_rng(seed)
+    have = set(zip(g.src.tolist(), g.dst.tolist()))
+    batches, used = [], set()
+    for _ in range(n_batches):
+        batch = []
+        while len(batch) < batch_edges:
+            u = int(rng.integers(0, g.n))
+            v = int(rng.integers(0, g.n))
+            if u == v:
+                continue
+            e = (min(u, v), max(u, v))
+            if e in used or (e[0], e[1]) in have or (e[1], e[0]) in have:
+                continue
+            used.add(e)
+            batch.append(e)
+        batches.append(batch)
+    return batches
+
+
+def _service(g, mode: str, max_batch: int, engine: str = "auto"):
+    reg = GraphRegistry(update_mode=mode, engine=engine)
+    reg.register("community", g)
+    return PageRankService(reg, max_batch=max_batch, cache_capacity=4096,
+                           max_top_k=8, invalidation_radius=2)
+
+
+def update_churn(quick: bool = False, batch_edges: int | None = None):
+    """Returns (csv_rows, json_records) — one row per update mode."""
+    g = generators.caveman(40, 80, seed=0) if quick else \
+        generators.caveman(60, 100, seed=0)
+    batch_edges = batch_edges or 32
+    n_cycles = 3 if quick else 6
+    n_queries = 24
+    rng = np.random.default_rng(1)
+    query_seeds = [(int(s),) for s in rng.choice(g.n, n_queries,
+                                                 replace=False)]
+    # one extra batch is the untimed warm-up round-trip: first updates pay
+    # one-off scatter/solve compilations, steady-state churn does not
+    batches = _non_edge_batches(g, n_cycles + 1, batch_edges, seed=2)
+    warmup, batches = batches[0], batches[1:]
+
+    rows = [("family", "engine", "mode", "batch_edges", "updates",
+             "us_per_apply", "us_per_update", "retention", "qps_churn",
+             "parity_l1", "apply_speedup", "update_speedup")]
+    records = []
+    results = {}
+    for engine, mode in (("coo", "rebuild"), ("coo", "incremental"),
+                         ("auto", "rebuild"), ("auto", "incremental")):
+        svc = _service(g, mode, max_batch=n_queries, engine=engine)
+        qid = 0
+        for s in query_seeds:                      # warm cache + compile
+            svc.submit(PPRQuery(qid=qid, graph="community", seeds=s))
+            qid += 1
+        svc.run_until_drained()
+        svc.update_graph("community", insert=warmup)   # compile the update
+        svc.update_graph("community", delete=warmup)   # path off the clock
+        for s in query_seeds:                          # re-warm the cache
+            svc.submit(PPRQuery(qid=qid, graph="community", seeds=s))
+            qid += 1
+        svc.run_until_drained()
+
+        apply_times = []                  # apply_updates-only wall times
+        orig_apply = svc.registry.apply_updates
+
+        def timed_apply(*a, **kw):
+            t = time.perf_counter()
+            out = orig_apply(*a, **kw)
+            apply_times.append(time.perf_counter() - t)
+            return out
+
+        svc.registry.apply_updates = timed_apply
+
+        update_s = 0.0
+        n_updates = 0
+        served = 0
+        t_all = time.perf_counter()
+        for i, batch in enumerate(batches):
+            t0 = time.perf_counter()
+            svc.update_graph("community", insert=batch)
+            update_s += time.perf_counter() - t0
+            n_updates += 1
+            if i % 2 == 1:                        # half round-trip back out
+                t0 = time.perf_counter()
+                svc.update_graph("community", delete=batch)
+                update_s += time.perf_counter() - t0
+                n_updates += 1
+            for s in query_seeds:                 # churned mixed workload
+                svc.submit(PPRQuery(qid=qid, graph="community", seeds=s))
+                qid += 1
+                served += 1
+            svc.run_until_drained()
+        wall = time.perf_counter() - t_all
+        st = svc.stats
+        retention = st["cache_retained"] / max(
+            st["cache_retained"] + st["cache_dropped"], 1)
+        svc.registry.apply_updates = orig_apply
+        results[(engine, mode)] = {
+            "svc": svc,
+            "us_per_apply": sum(apply_times) / len(apply_times) * 1e6,
+            "us_per_update": update_s / n_updates * 1e6,
+            "retention": retention,
+            "qps": served / wall,
+        }
+
+    # parity: every run ends at the same edge set; solve through each
+    # churned engine state and against a from-scratch build of those keys
+    rg = results[("coo", "incremental")]["svc"].registry.get("community")
+    keys = rg.keys
+    g_fresh = Graph.from_undirected_edges(g.n, keys // g.n, keys % g.n)
+    ref = _service(g_fresh, "rebuild", max_batch=1)
+    probe = query_seeds[0]
+    r_ref = ref.query("community", probe, tol=1e-6, top_k=8)
+    for key, r in results.items():
+        rq = r["svc"].query("community", probe, tol=1e-6, top_k=8)
+        r["parity_l1"] = float(
+            np.abs(np.sort(rq.scores) - np.sort(r_ref.scores)).sum())
+
+    for engine in ("coo", "auto"):
+        base_apply = results[(engine, "rebuild")]["us_per_apply"]
+        base_update = results[(engine, "rebuild")]["us_per_update"]
+        for mode in ("rebuild", "incremental"):
+            r = results[(engine, mode)]
+            rows.append(("community", engine, mode, batch_edges,
+                         n_cycles + n_cycles // 2,
+                         round(r["us_per_apply"], 1),
+                         round(r["us_per_update"], 1),
+                         round(r["retention"], 3),
+                         round(r["qps"], 1), f"{r['parity_l1']:.2e}",
+                         round(base_apply / r["us_per_apply"], 2),
+                         round(base_update / r["us_per_update"], 2)))
+            records.append({"family": "community", "B": batch_edges,
+                            "engine": engine, "mode": mode,
+                            "n": g.n, "m": g.m,
+                            "us_per_apply": r["us_per_apply"],
+                            "us_per_update": r["us_per_update"],
+                            "retention_rate": r["retention"],
+                            "qps_churn": r["qps"],
+                            "parity_l1": r["parity_l1"]})
+    return rows, records
+
+
+def main():
+    quick = "--quick" in sys.argv
+    rows, _ = update_churn(quick=quick)
+    print("\n## update_churn_incremental_vs_rebuild")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,19 @@ class PPRServeConfig:
     # overrides the residual-check period (None = default_chunk(c, tol))
     adaptive: bool = True
     adaptive_chunk: int | None = None
+    # edge-update path: "incremental" patches the padded device arrays in
+    # place (falling back to a full rebuild when a batch overflows the edge
+    # bucket), "rebuild" always takes the full path — see docs/serving.md
+    update_mode: str = "incremental"
+    # selective cache invalidation: drop only cached results seeded within
+    # this many hops of an update's touched vertices, re-stamp the rest to
+    # the new epoch (None = blanket flush of the graph's entries)
+    invalidation_radius: int | None = 2
+    # background re-solve tick: refresh up to this many retained
+    # near-boundary entries per idle tick, warm-started from their cached
+    # scores via power_refine (0 = off); refresh_rounds power rounds each
+    refresh_batch: int = 8
+    refresh_rounds: int = 8
 
 
 def full_config() -> PPRServeConfig:
@@ -67,14 +80,18 @@ def make_service(cfg: PPRServeConfig):
     from repro.serve.pagerank_service import PageRankService
     reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch,
                         grid=cfg.mesh_grid,
-                        partition_lane=cfg.partition_lane)
+                        partition_lane=cfg.partition_lane,
+                        update_mode=cfg.update_mode)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
     svc = PageRankService(reg, max_batch=cfg.max_batch,
                           cache_capacity=cfg.cache_capacity,
                           max_top_k=cfg.max_top_k,
                           adaptive=cfg.adaptive,
-                          adaptive_chunk=cfg.adaptive_chunk)
+                          adaptive_chunk=cfg.adaptive_chunk,
+                          invalidation_radius=cfg.invalidation_radius,
+                          refresh_batch=cfg.refresh_batch,
+                          refresh_rounds=cfg.refresh_rounds)
     reg.schedule(cfg.c, cfg.tol)  # precompute the coefficient vector
     return svc
 
@@ -117,6 +134,11 @@ def smoke_run(seed: int = 0):
             "cache_hit": jnp.float32(hit is not None and hit.cached),
             "epoch": jnp.float32(epoch),
             "solves": jnp.float32(svc.stats["solves"]),
+            # update-path telemetry: in-place patches taken and cache
+            # entries that survived the update via selective invalidation
+            "updates_incremental": jnp.float32(
+                svc.stats["incremental_updates"]),
+            "cache_retained": jnp.float32(svc.stats["cache_retained"]),
             # adaptive telemetry: rounds the residual control actually ran
             # vs the a-priori Formula 8 budget across all ticks
             "rounds_used": jnp.float32(svc.stats["rounds_used"]),

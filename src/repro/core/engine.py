@@ -44,6 +44,16 @@ block-ELL and the sharded engines, whose global (sharding-constrained)
 arrays additionally make the residual reductions lower to cross-shard
 psums for free.
 
+Every engine also implements `refresh(g, delta, *, dg=None, ...)` — the
+edge-update hook the serving registry calls instead of re-running
+`select_engine` (format choice is sticky across updates). COO is free: the
+registry patches the padded DeviceGraph in place and the engine, holding
+the same object, is already current. Block-ELL re-tiles but reuses its BFS
+perm when the delta's touched-vertex set is small (skipping the dominant
+host-side BFS); the sharded engines rebuild their partition on the SAME
+mesh. `delta` is a `graph.structure.EdgeDelta` (or None to force the
+conservative rebuild).
+
 `select_engine(g, batch)` picks a format host-side: with multiple devices
 and a graph big enough to amortize the per-round collectives it shards
 (2D grid when the mesh has >= 4 devices and n clears the 2D bar, 1D row
@@ -124,6 +134,17 @@ class CooEngine:
 
     def cheb_round(self, y, t, acc, ck):
         return _default_cheb_round(y, t, acc, ck)
+
+    def refresh(self, g: Graph, delta=None, *, dg: DeviceGraph | None = None,
+                **kw) -> "CooEngine":
+        """Refresh after an edge-update batch (see the protocol note in the
+        module docstring). The COO format needs no rebuild: when the caller
+        patched this engine's own DeviceGraph in place (the incremental
+        path) the engine is already current; a different dg (the rebuild
+        fallback) just swaps in."""
+        if dg is None:
+            return CooEngine(device_graph(g, self.dtype))
+        return self if dg is self.dg else CooEngine(dg)
 
     def tree_flatten(self):
         return (self.dg,), None
@@ -228,6 +249,29 @@ class BlockEllEngine:
 
     def cheb_round(self, y, t, acc, ck):
         return _default_cheb_round(y, t, acc, ck)
+
+    # a localized delta barely moves tile fill, so the cached BFS perm stays
+    # good and the rebuild skips the (host python, by far dominant) BFS;
+    # past this touched fraction the locality argument is gone -> re-BFS
+    REFRESH_PERM_MAX_TOUCHED = 0.25
+
+    def refresh(self, g: Graph, delta=None, *,
+                dg: DeviceGraph | None = None, stable_shapes: bool = True,
+                **kw):
+        """Rebuild the tiles for the updated graph. When the delta's
+        touched-vertex set is a small fraction of the graph the existing
+        BFS perm is reused (any perm is valid — only fill-rate is at
+        stake), which turns the rebuild into one vectorized re-tiling pass;
+        a delocalized delta (or none) re-runs the BFS."""
+        perm = None
+        if delta is not None and \
+                delta.touched.size <= self.REFRESH_PERM_MAX_TOUCHED * g.n:
+            perm = np.asarray(self.perm, np.int64)
+        return type(self).from_graph(g, block=self.block,
+                                     use_kernel=self.use_kernel,
+                                     interpret=self.interpret,
+                                     pad_slots_to_pow2=stable_shapes,
+                                     perm=perm)
 
     def tree_flatten(self):
         children = (self.block_cols, self.values, self.perm, self.inv_perm)
@@ -362,6 +406,15 @@ class Sharded1DEngine(ShardedEngine):
             out_specs=vec_spec)
         return fn(x, self.src, self.dst_local, self.weight)
 
+    def refresh(self, g: Graph, delta=None, *, dg: DeviceGraph | None = None,
+                lane: int = 128, **kw) -> "Sharded1DEngine":
+        """Rebuild the row partition for the updated graph on the SAME mesh
+        (device placement and axis names kept, so recompiled-solve churn is
+        limited to genuinely changed shapes)."""
+        return type(self).from_graph(g, mesh=self.mesh, lane=lane,
+                                     dtype=self.weight.dtype,
+                                     comm_dtype=self.comm_dtype)
+
     def tree_flatten(self):
         children = (self.src, self.dst_local, self.weight)
         aux = (self.mesh, self.axes, self.n_orig, self.n_pad,
@@ -480,6 +533,14 @@ class Sharded2DEngine(ShardedEngine):
             in_specs=(vec_spec, edge_spec, edge_spec, edge_spec),
             out_specs=vec_spec, check_vma=False)
         return fn(x, self.src_local, self.dst_local, self.weight)
+
+    def refresh(self, g: Graph, delta=None, *, dg: DeviceGraph | None = None,
+                lane: int = 128, **kw) -> "Sharded2DEngine":
+        """Rebuild the grid partition for the updated graph on the SAME
+        mesh (grid shape and device placement kept)."""
+        return type(self).from_graph(g, mesh=self.mesh, lane=lane,
+                                     dtype=self.weight.dtype,
+                                     comm_dtype=self.comm_dtype)
 
     def tree_flatten(self):
         children = (self.src_local, self.dst_local, self.weight,

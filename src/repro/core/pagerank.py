@@ -49,7 +49,7 @@ from repro.core.engine import CooEngine, as_engine
 from repro.graph.ops import DeviceGraph  # noqa: F401  (re-exported API surface)
 
 __all__ = ["PageRankResult", "cpaa", "cpaa_adaptive", "power", "forward_push",
-           "monte_carlo", "cpaa_fixed", "cpaa_adaptive_fixed",
+           "monte_carlo", "cpaa_fixed", "cpaa_adaptive_fixed", "power_refine",
            "true_pagerank_dense"]
 
 
@@ -257,6 +257,33 @@ def cpaa_adaptive(dg, c: float = 0.85, tol: float | None = None,
                           rounds_bound=sched.rounds,
                           column_rounds=np.asarray(col_rounds),
                           residual=np.asarray(resid))
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def power_refine(dg, x0: jax.Array, p: jax.Array, c, rounds: int):
+    """Warm-started refinement: `rounds` of x <- c P x + (1-c) p from x0.
+
+    CPAA's Chebyshev series has no incremental form — each T_k(P)p depends
+    on the whole recurrence history, so a cached result cannot be "resumed"
+    through it. But the series converges to the same fixed point as the
+    power/push recurrence, whose contraction factor c applies from ANY
+    starting vector: a cached score vector that is already close (e.g. a
+    retained serving-cache entry after a localized edge update) needs only
+    the few rounds that c^rounds * ||x0 - pi|| < tol, not a cold solve.
+    x0/p: [n] or [n, B] (x0 need not be exactly normalized — the final
+    normalization absorbs drift). Returns column-normalized PageRank.
+    """
+    eng = as_engine(dg)
+    x = eng.to_internal(x0)
+    pp = eng.to_internal(p)
+    pp = _normalize(pp)   # unit restart mass: the fixed point is the PPR
+    c = jnp.asarray(c, x.dtype)
+
+    def body(x, _):
+        return (c * eng.apply(x) + (1.0 - c) * pp).astype(x.dtype), 0.0
+
+    x, _ = jax.lax.scan(body, x, None, length=rounds)
+    return _normalize(eng.from_internal(x))
 
 
 @partial(jax.jit, static_argnames=("max_iter",))

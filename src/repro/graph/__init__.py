@@ -1,10 +1,13 @@
-from repro.graph.structure import Graph, BlockEll, build_block_ell, reorder_bfs
+from repro.graph.structure import (Graph, BlockEll, EdgeDelta,
+                                   build_block_ell, edge_delta, reorder_bfs)
 from repro.graph import generators, ops, partition, sampler
 
 __all__ = [
     "Graph",
     "BlockEll",
+    "EdgeDelta",
     "build_block_ell",
+    "edge_delta",
     "reorder_bfs",
     "generators",
     "ops",

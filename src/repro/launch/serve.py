@@ -57,6 +57,12 @@ def serve_pagerank(mod, args):
         cfg = replace(cfg, adaptive=args.adaptive)
     if args.adaptive_chunk is not None:
         cfg = replace(cfg, adaptive_chunk=args.adaptive_chunk)
+    if args.update_mode:
+        cfg = replace(cfg, update_mode=args.update_mode)
+    if args.invalidation_radius is not None:
+        # negative = blanket flush (the pre-selective behavior)
+        cfg = replace(cfg, invalidation_radius=args.invalidation_radius
+                      if args.invalidation_radius >= 0 else None)
     svc = mod.make_service(cfg)
     names = svc.registry.names()
     engines = {name: svc.registry.get(name).engine.name for name in names}
@@ -77,16 +83,21 @@ def serve_pagerank(mod, args):
                for j, q in enumerate(queries[:max(1, args.requests // 10)])]
 
     t0 = time.perf_counter()
+    results = {}
     for q in queries:
         svc.submit(q)
+    results.update(svc.run_until_drained())   # warm cache before the churn
     for u in range(args.updates):
         name = names[u % len(names)]
-        n = svc.registry.get(name).host.n
+        # rg.n, not rg.host.n: the vertex count is fixed at registration and
+        # reading .host after an in-place patch would force the lazy host
+        # Graph to materialize per batch
+        n = svc.registry.get(name).n
         edge = (int(rng.integers(0, n // 2)), int(rng.integers(n // 2, n)))
         svc.update_graph(name, insert=[edge])
     for q in repeats:
         svc.submit(q)
-    results = svc.run_until_drained()
+    results.update(svc.run_until_drained())
     dt = time.perf_counter() - t0
 
     total = len(results)
@@ -101,6 +112,12 @@ def serve_pagerank(mod, args):
     print(f"rounds [{mode}]: {st['rounds_used']} used vs "
           f"{st['rounds_bound']} a-priori bound "
           f"({saved} saved, {pct:.0f}%)")
+    if st["updates"]:
+        print(f"updates [{svc.registry.update_mode}]: {st['updates']} "
+              f"batches ({st['incremental_updates']} in-place, "
+              f"{st['noop_updates']} no-op); cache "
+              f"{st['cache_dropped']} dropped / {st['cache_retained']} "
+              f"retained, {st['refreshes']} background refreshes")
     print(f"cache: {svc.cache.stats()}")
 
 
@@ -134,6 +151,16 @@ def main(argv=None):
     ap.add_argument("--adaptive-chunk", type=int, default=None,
                     help="rounds between residual checks in adaptive mode "
                          "(default: sized from (c, tol))")
+    ap.add_argument("--update-mode", default=None,
+                    choices=["incremental", "rebuild"],
+                    help="edge-update path: patch the device arrays in "
+                         "place (incremental) or rebuild per batch "
+                         "(pagerank only; default from config)")
+    ap.add_argument("--invalidation-radius", type=int, default=None,
+                    help="drop only cached results seeded within this many "
+                         "hops of an update's touched vertices and retain "
+                         "the rest; negative = blanket flush (pagerank "
+                         "only; default from config)")
     args = ap.parse_args(argv)
 
     mod = get(args.arch)

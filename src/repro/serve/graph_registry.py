@@ -24,12 +24,28 @@ The registry is the serving-side owner of graph state:
     micro-batcher's per-tick round count then drops to whatever the
     measured residual demands instead of always paying the Formula 8 bound.
 
-Host-side rebuild cost is O(m log m) (numpy set ops on the canonical
-undirected edge keys); for the mesh-sized graphs this service targets that
-is far below one solve, and it happens off the query path only when an
-update batch arrives. Device edge arrays are padded to power-of-two buckets
-(zero-weight pad edges), so rebuilds keep jit shapes stable: an update only
-retraces the solve when m crosses a bucket boundary, not on every batch.
+Edge updates come in two flavours, selected by `update_mode`:
+
+  * **incremental** (default) — `apply_updates` computes the batch's
+    `EdgeDelta` (O(batch log m), no pass over the edge set) and, when the
+    changed slots fit the current power-of-two edge bucket, PATCHES the
+    device graph in place through the host `EdgeSlots` mirror: only the
+    affected slots of the padded src/dst/weight arrays and the touched rows
+    of inv_deg are rewritten — no host set-op rebuild, no engine reselect,
+    no solver retrace. The engine is kept current via its `refresh(delta)`
+    hook (free for COO; block-ELL re-tiles reusing its BFS perm; sharded
+    engines repartition on their existing mesh).
+  * **rebuild** — every batch takes the historical full path: numpy set ops
+    on the canonical keys, `from_undirected_edges`, fresh DeviceGraph +
+    `select_engine`. The incremental mode falls back to exactly this when a
+    batch overflows the bucket (the bucket then grows).
+
+A batch whose effective delta is EMPTY (duplicate inserts, deletes of
+absent edges) is detected before any of that and is a true no-op: no
+rebuild, no epoch bump, so downstream result caches keep every entry.
+Device edge arrays are padded to power-of-two buckets (zero-weight pad
+edges), so updates only retrace the solve when m crosses a bucket
+boundary, not on every batch.
 """
 from __future__ import annotations
 
@@ -40,11 +56,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.chebyshev import ChebSchedule, default_chunk, make_schedule
-from repro.core.engine import select_engine
-from repro.graph.ops import DeviceGraph, device_graph
-from repro.graph.structure import Graph
+from repro.core.engine import CooEngine, select_engine
+from repro.graph.ops import (DeviceGraph, EdgeSlots, device_graph,
+                             patch_device_graph)
+from repro.graph.structure import EdgeDelta, Graph, edge_delta
 
-__all__ = ["AdaptiveSchedule", "RegisteredGraph", "GraphRegistry"]
+__all__ = ["AdaptiveSchedule", "RegisteredGraph", "GraphRegistry",
+           "UPDATE_MODES"]
+
+UPDATE_MODES = ("incremental", "rebuild")
 
 
 @dataclass(frozen=True)
@@ -63,18 +83,51 @@ class AdaptiveSchedule:
     chunk: int
 
 
-@dataclass
 class RegisteredGraph:
     """One serving graph: host copy (for rebuilds), device copy (for solves),
     the solve engine picked for it, and the epoch stamped into every cache
-    key. `engine` is rebuilt with `dg` on every update, so it is always the
-    (graph, epoch)-current format — ticks reuse it as-is."""
+    key. `engine` is refreshed (or rebuilt with `dg`) on every effective
+    update, so it is always the (graph, epoch)-current format — ticks reuse
+    it as-is. `keys` is the sorted canonical undirected key set and `slots`
+    the host mirror of the padded device arrays (None when the registered
+    graph broke the symmetrized-edge contract, which forces rebuilds);
+    `last_delta` / `last_update_incremental` record what the most recent
+    update batch actually did.
 
-    name: str
-    host: Graph
-    dg: DeviceGraph
-    engine: object = None
-    epoch: int = 0
+    `host` is a LAZY view after an in-place update: the COO serving path
+    never reads the host Graph per batch, so the incremental path marks it
+    stale and the next reader (an engine refresh that re-tiles, a test
+    oracle, the CSR fallback) materializes it from the slot mirror."""
+
+    def __init__(self, name: str, host: Graph, dg: DeviceGraph,
+                 engine=None, epoch: int = 0, keys=None, slots=None):
+        self.name = name
+        self._host = host
+        self._host_stale = False
+        self.dg = dg
+        self.engine = engine
+        self.epoch = epoch
+        self.keys = keys
+        self.slots = slots
+        self.last_delta: EdgeDelta | None = None
+        self.last_update_incremental = False
+        self._csr_cache = None
+
+    @property
+    def host(self) -> Graph:
+        if self._host_stale:
+            self._host = self.slots.to_graph()
+            self._host_stale = False
+        return self._host
+
+    @host.setter
+    def host(self, g: Graph) -> None:
+        self._host = g
+        self._host_stale = False
+
+    @property
+    def n(self) -> int:
+        return self._host.n      # the vertex set is fixed at registration
 
 
 def _undirected_keys(g: Graph) -> np.ndarray:
@@ -113,7 +166,11 @@ class GraphRegistry:
     def __init__(self, dtype=jnp.float32, engine: str = "auto",
                  batch_hint: int | None = None, mesh=None,
                  grid: tuple[int, int] | None = None,
-                 partition_lane: int = 128):
+                 partition_lane: int = 128,
+                 update_mode: str = "incremental"):
+        if update_mode not in UPDATE_MODES:
+            raise ValueError(f"update_mode {update_mode!r} not in "
+                             f"{UPDATE_MODES}")
         self.dtype = dtype
         self.engine_mode = engine
         self.batch_hint = batch_hint  # expected micro-batch width (auto mode)
@@ -122,29 +179,38 @@ class GraphRegistry:
         self.mesh = mesh
         self.grid = grid
         self.partition_lane = partition_lane
+        self.update_mode = update_mode
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
         self._adaptive: dict[tuple[float, float, int | None], AdaptiveSchedule] = {}
 
     def _build(self, g: Graph):
-        """(DeviceGraph, engine) for one epoch of a graph. The COO engine
-        reuses the padded device graph; block-ELL engines pad their slot
-        count so the solve keeps stable jit shapes across epochs; sharded
-        engines rebuild their mesh partition here — per (graph, epoch), never
-        on the tick path."""
-        dg = device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m))
+        """(DeviceGraph, engine, EdgeSlots) for one epoch of a graph. The
+        COO engine reuses the padded device graph; block-ELL engines pad
+        their slot count so the solve keeps stable jit shapes across epochs;
+        sharded engines rebuild their mesh partition here — per (graph,
+        epoch), never on the tick path. The EdgeSlots host mirror is what
+        later updates patch through (None if the graph breaks the
+        symmetrized contract — those graphs always rebuild)."""
+        try:
+            slots = EdgeSlots.from_graph(g, cap=_edge_bucket(g.m))
+        except ValueError:
+            slots = None
+        dg = slots.to_device(self.dtype) if slots is not None else \
+            device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m))
         eng = select_engine(g, batch=self.batch_hint, mode=self.engine_mode,
                             dg=dg, dtype=self.dtype, stable_shapes=True,
                             mesh=self.mesh, grid=self.grid,
                             lane=self.partition_lane)
-        return dg, eng
+        return dg, eng, slots
 
     # ---- graphs -----------------------------------------------------------
     def register(self, name: str, g: Graph) -> RegisteredGraph:
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
-        dg, eng = self._build(g)
-        rg = RegisteredGraph(name=name, host=g, dg=dg, engine=eng)
+        dg, eng, slots = self._build(g)
+        rg = RegisteredGraph(name=name, host=g, dg=dg, engine=eng,
+                             keys=_undirected_keys(g), slots=slots)
         self._graphs[name] = rg
         return rg
 
@@ -160,24 +226,142 @@ class GraphRegistry:
     def apply_updates(self, name: str, insert=(), delete=()) -> RegisteredGraph:
         """Apply a batch of undirected edge inserts/deletes.
 
-        Duplicate inserts and deletes of absent edges are no-ops. The vertex
-        set is fixed at registration. Rebuilds the DeviceGraph and bumps the
-        epoch even when the batch is a net no-op — callers treat the epoch
-        as "config version", and a monotone bump is the safe default.
+        Duplicate inserts and deletes of absent edges are no-ops; a batch
+        whose EFFECTIVE delta is empty changes nothing — no rebuild, no
+        epoch bump (so caches keyed on the epoch keep every entry). The
+        vertex set is fixed at registration.
+
+        With `update_mode="incremental"` an effective batch that fits the
+        current edge bucket is applied as an in-place device patch + engine
+        refresh; otherwise (mode "rebuild", bucket overflow, or a graph
+        without an EdgeSlots mirror) the full rebuild runs. Either way the
+        epoch bumps exactly once per effective batch, and `rg.last_delta`
+        reports which edges/vertices moved — the serving layer keys its
+        selective cache invalidation off `last_delta.touched`.
         """
         rg = self.get(name)
-        n = rg.host.n
-        keys = _undirected_keys(rg.host)
-        if len(delete):
-            keys = np.setdiff1d(keys, _edges_to_keys(n, delete),
-                                assume_unique=True)
-        if len(insert):
-            keys = np.union1d(keys, _edges_to_keys(n, insert))
-        g_new = Graph.from_undirected_edges(n, keys // n, keys % n)
-        rg.host = g_new
-        rg.dg, rg.engine = self._build(g_new)
+        n = rg.n
+        ins = _edges_to_keys(n, insert) if len(insert) else \
+            np.empty(0, np.int64)
+        dele = _edges_to_keys(n, delete) if len(delete) else \
+            np.empty(0, np.int64)
+        if rg.keys is None:
+            rg.keys = _undirected_keys(rg.host)
+        delta = edge_delta(n, rg.keys, ins, dele)
+        rg.last_delta = delta
+        rg.last_update_incremental = False
+        if delta.is_noop:
+            return rg
+
+        patch = None
+        if self.update_mode == "incremental" and rg.slots is not None:
+            patch = rg.slots.apply_delta(delta)
+        if patch is not None:
+            patch_device_graph(rg.dg, patch)
+            rg._host_stale = True   # materialized on next read, not per batch
+            if isinstance(rg.engine, CooEngine):
+                # the COO engine shares rg.dg, already patched in place —
+                # refresh without forcing the host Graph materialization
+                rg.engine = rg.engine.refresh(None, delta, dg=rg.dg)
+            else:
+                rg.engine = rg.engine.refresh(rg.host, delta, dg=rg.dg,
+                                              stable_shapes=True,
+                                              lane=self.partition_lane)
+            # the mirror maintains the sorted key set incrementally; alias
+            # it (apply_delta replaces, never mutates, its key array)
+            rg.keys = rg.slots.ekeys
+            rg.last_update_incremental = True
+        else:
+            # fallback: merge the sorted key set (memcpy-sized delete/insert
+            # at searchsorted positions, not set ops over m) and rebuild
+            keys = np.delete(rg.keys,
+                             np.searchsorted(rg.keys, delta.deleted))
+            keys = np.insert(keys, np.searchsorted(keys, delta.inserted),
+                             delta.inserted)
+            g_new = Graph.from_undirected_edges(n, keys // n, keys % n)
+            rg.host = g_new
+            rg.dg, rg.engine, rg.slots = self._build(g_new)
+            rg.keys = keys
         rg.epoch += 1
+        rg._csr_cache = None
         return rg
+
+    def hop_neighborhood(self, name: str, vertices, radius: int,
+                         extra: int = 0):
+        """Boolean [n] mask of every vertex within `radius` hops of
+        `vertices` on the CURRENT host graph (radius 0 = the set itself).
+        With `extra > 0`, returns (mask, outer_mask) where outer_mask
+        extends the walk `extra` more hops — both rings from ONE BFS, so
+        the serving layer's drop radius and refresh ring don't each pay a
+        sweep.
+
+        Vectorized BFS over the always-current edge-slot mirror (O(hops *
+        cap) boolean work, no per-update CSR re-sort; measured faster than
+        a device segment-sum hop — XLA CPU scatter-add is serial over the
+        edge list), falling back to a sorted-src host CSR cached per epoch.
+        This is the locality primitive behind selective cache invalidation:
+        entries seeded inside the mask are the ones a localized edge delta
+        can have perturbed beyond tolerance.
+        """
+        rg = self.get(name)
+        n = rg.n
+        mask = np.zeros(n, bool)
+        v = np.asarray(vertices, np.int64)
+        total_hops = max(radius, 0) + max(extra, 0)
+        if v.size:
+            mask[v] = True
+        # inner ring snapshot (taken mid-walk; pre-seeded when radius <= 0)
+        inner = mask.copy() if extra > 0 and radius <= 0 else None
+
+        def walk_slots():
+            nonlocal mask
+            src, dst, live = rg.slots.src, rg.slots.dst, rg.slots.live
+            for _ in range(total_hops):
+                hit = mask[src] & live
+                grew = np.zeros(n, bool)
+                grew[dst[hit]] = True
+                grew &= ~mask
+                if not grew.any():
+                    return
+                mask |= grew
+                yield
+
+        def walk_csr():
+            if rg._csr_cache is None:
+                g = rg.host
+                order = np.argsort(g.src, kind="stable")
+                counts = np.bincount(g.src, minlength=n).astype(np.int64)
+                row_start = np.concatenate([np.zeros(1, np.int64),
+                                            np.cumsum(counts)[:-1]])
+                rg._csr_cache = (row_start, counts, g.dst[order])
+            row_start, counts, dst_sorted = rg._csr_cache
+            frontier = v
+            for _ in range(total_hops):
+                cnt = counts[frontier]
+                total = int(cnt.sum())
+                if total == 0:
+                    return
+                # flat gather of every frontier vertex's CSR range
+                starts = np.repeat(row_start[frontier], cnt)
+                offs = np.arange(total) - np.repeat(
+                    np.cumsum(cnt) - cnt, cnt)
+                nbrs = dst_sorted[starts + offs]
+                new = np.unique(nbrs[~mask[nbrs]])
+                if new.size == 0:
+                    return
+                mask[new] = True
+                frontier = new
+                yield
+
+        hops_done = 0
+        if v.size and total_hops:
+            for _ in (walk_slots() if rg.slots is not None else walk_csr()):
+                hops_done += 1
+                if extra > 0 and hops_done == radius and inner is None:
+                    inner = mask.copy()
+        if extra <= 0:
+            return mask
+        return (mask if inner is None else inner), mask
 
     # ---- schedules --------------------------------------------------------
     def schedule(self, c: float, tol: float) -> tuple[ChebSchedule, jax.Array]:

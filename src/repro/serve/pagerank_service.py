@@ -25,8 +25,14 @@ core per tick):
     not full [n] vectors — the service answer is "which vertices", and k
     values instead of n keeps the device->host copy O(k * B);
   * an LRU cache keyed by (graph, epoch, seeds, c, tol) serves repeats
-    without touching the solver; edge-update batches bump the graph epoch
-    and purge that graph's entries, so staleness is structural, not timed.
+    without touching the solver; an EFFECTIVE edge-update batch bumps the
+    graph epoch and invalidates — blanket by default, or selectively
+    (`invalidation_radius`): only entries seeded within a hop radius of the
+    delta's touched vertices are dropped, the rest re-stamped to the new
+    epoch, and near-boundary survivors can be refreshed in the background
+    (`refresh_tick`) through a warm-started power_refine pass. A no-op
+    batch (duplicate insert, absent delete) changes nothing and flushes
+    nothing. Staleness stays structural, not timed.
 """
 from __future__ import annotations
 
@@ -39,7 +45,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed
+from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed, power_refine
 from repro.serve.graph_registry import GraphRegistry
 from repro.serve.result_cache import ResultCache
 
@@ -48,7 +54,13 @@ __all__ = ["PPRQuery", "PPRResult", "PageRankService"]
 
 @dataclass(frozen=True)
 class PPRQuery:
-    """One personalized-PageRank request: restart mass uniform over `seeds`."""
+    """One personalized-PageRank request: restart mass uniform over `seeds`.
+
+    Seeds are canonicalized (deduped + sorted) at CONSTRUCTION, so the
+    cache key and the personalization column the solver builds always agree
+    — a query arriving with repeated seeds is the same query as its deduped
+    twin, not a different distribution that could alias a cached result.
+    """
 
     qid: int
     graph: str
@@ -57,9 +69,12 @@ class PPRQuery:
     tol: float = 1e-4
     top_k: int = 8
 
+    def __post_init__(self):
+        object.__setattr__(
+            self, "seeds", tuple(sorted({int(s) for s in self.seeds})))
+
     def key(self, epoch: int) -> tuple:
-        return (self.graph, epoch, tuple(sorted(set(self.seeds))),
-                float(self.c), float(self.tol))
+        return (self.graph, epoch, self.seeds, float(self.c), float(self.tol))
 
 
 @dataclass
@@ -83,6 +98,18 @@ def _solve_topk(engine, coeffs: jax.Array, p: jax.Array, rounds: int, k: int):
     return idx.astype(jnp.int32), scores
 
 
+@partial(jax.jit, static_argnames=("rounds", "k"))
+def _refine_topk(engine, x0: jax.Array, p: jax.Array, c, rounds: int, k: int):
+    """Warm-started single-column refresh: a few `power_refine` rounds from
+    a cached score vector, then re-ranked top-k. The background re-solve
+    tick runs retained-but-near-boundary cache entries through this instead
+    of a cold CPAA solve (the Chebyshev series cannot be resumed; the power
+    recurrence contracts from any warm start)."""
+    pi = power_refine(engine, x0, p, c, rounds)
+    scores, idx = jax.lax.top_k(pi, k)
+    return idx.astype(jnp.int32), scores
+
+
 @partial(jax.jit, static_argnames=("max_rounds", "chunk", "k"))
 def _solve_topk_adaptive(engine, p: jax.Array, c, tol, max_rounds: int,
                          chunk: int, k: int):
@@ -103,7 +130,10 @@ class PageRankService:
 
     def __init__(self, registry: GraphRegistry, max_batch: int = 32,
                  cache_capacity: int = 4096, max_top_k: int = 16,
-                 adaptive: bool = False, adaptive_chunk: int | None = None):
+                 adaptive: bool = False, adaptive_chunk: int | None = None,
+                 invalidation_radius: int | None = None,
+                 refresh_batch: int = 0, refresh_rounds: int = 8,
+                 refresh_margin: int = 1):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.registry = registry
@@ -116,6 +146,27 @@ class PageRankService:
         # point)
         self.adaptive = adaptive
         self.adaptive_chunk = adaptive_chunk
+        # invalidation_radius=None: an edge update flushes every cached
+        # result for the graph (blanket, the conservative default). An int
+        # switches to SELECTIVE invalidation: only entries whose seed set
+        # lies within that many hops of the update's touched vertices are
+        # dropped; the rest are re-stamped under the new epoch and stay
+        # servable (undirected PageRank is degree-dominated, so a localized
+        # delta perturbs scores locally — see docs/serving.md).
+        self.invalidation_radius = invalidation_radius
+        # refresh_batch > 0 arms the background re-solve tick: retained
+        # entries seeded within refresh_margin hops OUTSIDE the drop radius
+        # (the near-boundary ring, where the perturbation is largest among
+        # the survivors) are queued, and each refresh_tick() warm-starts up
+        # to refresh_batch of them from their cached scores through a short
+        # power_refine pass (refresh_rounds rounds).
+        self.refresh_batch = refresh_batch
+        self.refresh_rounds = refresh_rounds
+        self.refresh_margin = refresh_margin
+        # bounded: an update-only stream (bulk backfill, no query drains)
+        # must not grow the queue without limit — when full, the OLDEST
+        # keys drop first, which is also the superseded-soonest end
+        self._refresh: deque[tuple] = deque(maxlen=4096)
         self.cache = ResultCache(cache_capacity)
         self._pending: deque[PPRQuery] = deque()
         self._results: dict[int, PPRResult] = {}
@@ -131,7 +182,10 @@ class PageRankService:
         # rounds_bound when adaptive
         self.stats = {"queries": 0, "cache_hits": 0, "solves": 0,
                       "solved_queries": 0, "ticks": 0, "padded_columns": 0,
-                      "updates": 0, "rounds_used": 0, "rounds_bound": 0}
+                      "updates": 0, "rounds_used": 0, "rounds_bound": 0,
+                      "noop_updates": 0, "incremental_updates": 0,
+                      "cache_dropped": 0, "cache_retained": 0,
+                      "refreshes": 0}
 
     # ---- submission -------------------------------------------------------
     def submit(self, q: PPRQuery) -> PPRResult | None:
@@ -139,8 +193,8 @@ class PageRankService:
         if not q.seeds:
             raise ValueError("query needs at least one seed vertex")
         rg = self.registry.get(q.graph)
-        if min(q.seeds) < 0 or max(q.seeds) >= rg.host.n:
-            raise ValueError(f"seed out of range [0, {rg.host.n})")
+        if min(q.seeds) < 0 or max(q.seeds) >= rg.n:
+            raise ValueError(f"seed out of range [0, {rg.n})")
         if q.top_k > self.max_top_k:
             raise ValueError(f"top_k {q.top_k} exceeds service max_top_k "
                              f"{self.max_top_k}")
@@ -159,12 +213,111 @@ class PageRankService:
 
     # ---- graph updates ----------------------------------------------------
     def update_graph(self, name: str, insert=(), delete=()) -> int:
-        """Apply an edge-update batch; bumps the epoch and drops every cached
-        result for that graph. Returns the new epoch."""
+        """Apply an edge-update batch. Returns the (possibly unchanged)
+        epoch.
+
+        A batch whose effective delta is empty is a true no-op: no epoch
+        bump, every cached entry survives (still counted in `updates`).
+        Otherwise the epoch bumps and the cache is invalidated — blanket
+        (every entry for the graph) when `invalidation_radius` is None,
+        selectively when it is set: entries seeded within the radius of the
+        delta's touched vertices are dropped, the rest re-stamped under the
+        new epoch, and (with the re-solve tick armed) retained entries in
+        the near-boundary ring are queued for a warm-started refresh.
+        """
         rg = self.registry.apply_updates(name, insert=insert, delete=delete)
-        self.cache.invalidate_graph(name)
         self.stats["updates"] += 1
+        delta = rg.last_delta
+        if delta is not None and delta.is_noop:
+            self.stats["noop_updates"] += 1
+            return rg.epoch
+        if rg.last_update_incremental:
+            self.stats["incremental_updates"] += 1
+        if self.invalidation_radius is None or delta is None:
+            dropped = self.cache.invalidate_graph(name)
+            self.stats["cache_dropped"] += dropped
+            return rg.epoch
+        if self.cache.count_for(name) == 0:
+            return rg.epoch   # nothing cached: skip the hop-mask BFS too
+
+        # one BFS yields both rings: the drop mask and (when the re-solve
+        # tick is armed) the refresh ring refresh_margin hops further out
+        extra = self.refresh_margin if self.refresh_batch > 0 else 0
+        masks = self.registry.hop_neighborhood(
+            name, delta.touched, self.invalidation_radius, extra=extra)
+        near, ring = masks if extra else (masks, None)
+
+        def drop(key):
+            return any(near[s] for s in key[2])
+
+        dropped, retained = self.cache.invalidate_selective(name, rg.epoch,
+                                                            drop)
+        self.stats["cache_dropped"] += dropped
+        self.stats["cache_retained"] += len(retained)
+        if ring is not None:
+            for key in retained:
+                if any(ring[s] for s in key[2]):
+                    self._refresh.append(key)
         return rg.epoch
+
+    # ---- the background re-solve tick -------------------------------------
+    def _refresh_round_count(self, coverage_gap: float, c: float,
+                             tol: float) -> int:
+        """Rounds so the refreshed entry is within tol of the TRUE new-graph
+        PPR. The cache holds only top-k scores, so the warm start carries a
+        truncation error of `coverage_gap` (the mass outside the top k) —
+        which on spread-out graphs dwarfs the edge-delta perturbation. The
+        power recurrence contracts L1 error by c per round from any start,
+        so c^rounds * coverage_gap <= tol picks the count that burns the
+        truncation off; refresh_rounds is the floor, and the result is
+        rounded up to a power of two so jit compiles a bounded shape set.
+        (With a well-covered top-k this stays short; with a poor one it
+        approaches a plain power solve, which is the honest price of
+        correctness — never re-cache a WORSE entry than the one retained.)
+        """
+        rounds = self.refresh_rounds
+        if coverage_gap > tol:
+            rounds = max(rounds, int(np.ceil(np.log(tol / coverage_gap)
+                                             / np.log(c))))
+        return 1 << max(rounds - 1, 0).bit_length()
+
+    def refresh_tick(self, max_entries: int | None = None) -> int:
+        """Refresh up to `max_entries` (default `refresh_batch`) queued
+        near-boundary cache entries through a warm-started `power_refine`
+        pass on the current engine, re-ranking and re-caching in place.
+        Entries whose epoch was superseded by a later update, or that were
+        evicted meanwhile, are skipped. Returns the number refreshed.
+        `run_until_drained` calls this after the queue empties when
+        `refresh_batch > 0`; callers can also invoke it directly as an idle
+        tick."""
+        budget = self.refresh_batch if max_entries is None else max_entries
+        done = 0
+        while self._refresh and done < budget:
+            key = self._refresh.popleft()
+            graph, epoch, seeds, c, tol = key
+            rg = self.registry.get(graph)
+            if epoch != rg.epoch:
+                continue      # a later update superseded this refresh
+            hit = self.cache.get(key, count=False)
+            if hit is None:
+                continue      # evicted before we got to it
+            idx, scores = hit
+            n = rg.n
+            k = min(self.max_top_k, n)
+            # warm start: cached top-k mass in place, the unseen remainder
+            # spread uniformly (power_refine normalizes)
+            gap = max(0.0, 1.0 - float(scores.sum()))
+            x0 = np.full(n, gap / n, np.float32)
+            x0[idx] += scores
+            p = np.zeros(n, np.float32)
+            p[list(seeds)] = 1.0
+            new_idx, new_scores = _refine_topk(
+                rg.engine, jnp.asarray(x0), jnp.asarray(p), c,
+                rounds=self._refresh_round_count(gap, c, tol), k=k)
+            self.cache.put(key, (np.asarray(new_idx), np.asarray(new_scores)))
+            self.stats["refreshes"] += 1
+            done += 1
+        return done
 
     # ---- the micro-batcher ------------------------------------------------
     def _bucket(self, b: int) -> int:
@@ -215,12 +368,12 @@ class PageRankService:
             return out
 
         sched, coeffs = self.registry.schedule(live[0].c, live[0].tol)
-        n = rg.host.n
+        n = rg.n
         b_pad = self._bucket(len(live))
         self.stats["padded_columns"] += b_pad - len(live)
         p = np.zeros((n, b_pad), np.float32)
         for j, q in enumerate(live):
-            p[np.asarray(sorted(set(q.seeds)), np.int64), j] = 1.0
+            p[np.asarray(q.seeds, np.int64), j] = 1.0  # canonical at birth
         p[:, len(live):] = 1.0  # pad columns: uniform mass, discarded
 
         k = min(self.max_top_k, n)
@@ -271,6 +424,8 @@ class PageRankService:
             max_ticks -= 1
             if max_ticks <= 0:
                 raise RuntimeError("PPR serve loop did not drain")
+        if self.refresh_batch > 0:
+            self.refresh_tick()   # idle work: near-boundary cache refreshes
         out, self._results = self._results, {}
         return out
 

@@ -9,6 +9,16 @@ isn't wasted on unreachable keys; thanks to the per-graph index that purge
 is O(entries for that graph), not a full O(capacity) dict scan, so
 high-churn graphs (frequent edge-update batches) don't stall the tick loop.
 
+`invalidate_selective` is the update-path alternative to the blanket purge:
+entries the caller marks as perturbed (seed sets near the edge delta) are
+dropped, and every other entry is RE-STAMPED to the new epoch — same value,
+key rebuilt with the new epoch — instead of flushed. Undirected PageRank is
+degree-dominated with a bounded correction (Grolmusz), so a localized edge
+delta moves scores locally and far-from-delta entries stay servable;
+retention is a deliberate approximation the service can tighten with its
+re-solve tick. Re-stamped entries are touched to most-recent, which is the
+LRU-honest reading of "this entry just survived an update".
+
 Values are (indices, scores) arrays of the service-level max_top_k; queries
 asking for a smaller k slice the cached arrays, so one entry serves every
 top_k <= max_top_k at that operating point.
@@ -32,6 +42,7 @@ class ResultCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.retained = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -69,6 +80,12 @@ class ResultCache:
             self._index_discard(dead)
             self.evictions += 1
 
+    def count_for(self, graph: str) -> int:
+        """Live entry count for `graph` — lets the update path skip
+        invalidation work (hop-mask BFS included) when there is nothing to
+        invalidate."""
+        return len(self._by_graph.get(graph, ()))
+
     def invalidate_graph(self, graph: str) -> int:
         """Drop every entry for `graph` (any epoch). Returns the count."""
         dead = self._by_graph.pop(graph, ())
@@ -77,8 +94,40 @@ class ResultCache:
         self.invalidations += len(dead)
         return len(dead)
 
+    def invalidate_selective(self, graph: str, new_epoch: int,
+                             drop) -> tuple[int, list]:
+        """Selective update-path invalidation for `graph`.
+
+        drop: callable(key) -> bool. Entries where it returns True are
+        purged; the rest are re-stamped under
+        (graph, new_epoch, *key[2:]) — value kept, entry moved to
+        most-recent — so they stay servable across the epoch bump. Returns
+        (dropped_count, retained_new_keys); the caller uses the retained
+        keys to schedule re-solve refreshes. O(entries for that graph).
+        """
+        keys = self._by_graph.pop(graph, ())
+        dropped = 0
+        seen: set = set()
+        retained_keys: list = []
+        for k in keys:
+            val = self._d.pop(k)
+            if drop(k):
+                dropped += 1
+                continue
+            nk = (graph, new_epoch) + tuple(k[2:])
+            self._d[nk] = val
+            if nk not in seen:     # two stale epochs can collapse to one key
+                seen.add(nk)
+                retained_keys.append(nk)
+        if retained_keys:
+            self._by_graph[graph] = seen
+        self.invalidations += dropped
+        self.retained += len(retained_keys)
+        return dropped, retained_keys
+
     def stats(self) -> dict:
         return {"size": len(self._d), "capacity": self.capacity,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
-                "invalidations": self.invalidations}
+                "invalidations": self.invalidations,
+                "retained": self.retained}

@@ -105,3 +105,43 @@ def test_adaptive_compare_entries_are_gated(tmp_path):
                        capture_output=True, text=True, timeout=60)
     assert r.returncode == 1, r.stdout
     assert "coo/adaptive" in r.stdout
+
+
+def test_update_churn_entries_gate_with_their_own_floor(tmp_path):
+    """update_churn records join the gate keyed (family, batch_edges,
+    update-engine/mode) and use the LOWER --min-us-update jitter floor:
+    the incremental apply path sits well under the solve floor but must
+    still gate."""
+    def payload(slow: float):
+        return {
+            "engine_compare": [{"family": "mesh", "B": 1, "engine": "coo",
+                                "us_per_solve": 50000.0}],
+            "update_churn": [
+                {"family": "community", "B": 32, "engine": "coo",
+                 "mode": "rebuild", "us_per_update": 15000.0},
+                {"family": "community", "B": 32, "engine": "coo",
+                 "mode": "incremental", "us_per_update": 3500.0 * slow},
+            ],
+        }
+    po, pn = tmp_path / "o.json", tmp_path / "n.json"
+    po.write_text(json.dumps(payload(1.0)))
+    pn.write_text(json.dumps(payload(3.0)))  # incremental regressed 3x
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1, r.stdout
+    assert "update-coo/incremental" in r.stdout
+    # ...but a sub-floor entry (below 1000us baseline) stays informational
+    def tiny(slow: float):
+        p = payload(1.0)
+        p["update_churn"].append(
+            {"family": "community", "B": 1, "engine": "coo",
+             "mode": "incremental", "us_per_update": 400.0 * slow})
+        return p
+    po.write_text(json.dumps(tiny(1.0)))
+    pn.write_text(json.dumps(tiny(3.0)))
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stdout
+    assert "info" in r.stdout

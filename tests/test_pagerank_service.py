@@ -145,7 +145,7 @@ class TestResultCacheIndex:
         assert cache.invalidations == 3
         assert cache.stats() == {"size": 1, "capacity": 4, "hits": 4,
                                  "misses": 1, "evictions": 2,
-                                 "invalidations": 3}
+                                 "invalidations": 3, "retained": 0}
 
     def test_index_survives_eviction_of_a_graphs_last_key(self):
         from repro.serve.result_cache import ResultCache
