@@ -1,12 +1,14 @@
 """Benchmark regression gate for CI.
 
-Compares the fresh `engine_compare`, `adaptive_compare` AND `update_churn`
-records of a `benchmarks.run --json` output against the committed baseline
-(BENCH_pagerank.json) and fails when any entry — keyed
-(family, B, engine) for engine_compare, (family, B, "engine/mode") for
-adaptive_compare, (family, batch_edges, "update/mode") for update_churn
+Compares the fresh `engine_compare`, `adaptive_compare`, `update_churn`
+AND `serve_pagerank` records of a `benchmarks.run --json` output against
+the committed baseline (BENCH_pagerank.json) and fails when any entry —
+keyed (family, B, engine) for engine_compare, (family, B, "engine/mode")
+for adaptive_compare, (family, batch_edges, "update/mode") for update_churn
 (per-batch update latency, so update-path regressions gate like solve
-regressions) — slowed down by more than --threshold.
+regressions), and (family, B, "serve/mean" | "serve/p99") for the serving
+section (the p99 key gates TAIL latency, which a mean can hide) — slowed
+down by more than --threshold.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -50,6 +52,14 @@ def _load_entries(path: str) -> dict[tuple, float]:
         # per-batch update latency; B is the batch's edge count here
         out[(rec["family"], rec["B"],
              f"update-{rec['engine']}/{rec['mode']}")] = rec["us_per_update"]
+    for rec in payload.get("serve_pagerank", []):
+        if rec.get("family") != "serve_pagerank":
+            continue   # the serve_overhead record is informational only
+        # the serve section gates on the TAIL, not just the mean: a p99
+        # regression with a flat mean is exactly the failure mode the
+        # observability layer exists to catch
+        out[(rec["family"], rec["B"], "serve/mean")] = rec["us_per_query"]
+        out[(rec["family"], rec["B"], "serve/p99")] = rec["p99_us"]
     return out
 
 
@@ -83,6 +93,11 @@ def main(argv=None) -> int:
                          "path sits well under the solve floor — without "
                          "its own floor the tentpole path would never "
                          "gate")
+    ap.add_argument("--min-us-serve", type=float, default=1000.0,
+                    help="jitter floor for serve_pagerank entries (default "
+                         "1000us): per-query latency at large B amortizes "
+                         "to well under the solve floor, and p99 on a "
+                         "quick run rests on few samples")
     ap.add_argument("--commit-msg", default=None,
                     help="text to scan for the [bench-skip] marker "
                          "(default: git log -1)")
@@ -114,8 +129,12 @@ def main(argv=None) -> int:
     failures = []
     for key in shared:
         rel = ratios[key] / norm
-        floor = args.min_us_update if key[2].startswith("update") \
-            else args.min_us
+        if key[2].startswith("update"):
+            floor = args.min_us_update
+        elif key[2].startswith("serve"):
+            floor = args.min_us_serve
+        else:
+            floor = args.min_us
         if rel <= 1.0 + args.threshold:
             status = "ok"
         elif old[key] < floor:

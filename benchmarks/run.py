@@ -64,6 +64,15 @@ def main(argv=None) -> None:
     uc_rows, uc_records = update_churn_bench.update_churn(quick=quick)
     _emit(sections, "update_churn_incremental_vs_rebuild", uc_rows)
 
+    # serving: qps + histogram-derived p50/p99/p999 per-query latency and
+    # the metrics-on/off overhead check — runs in BOTH modes so the p99
+    # regression gate sees every push
+    sv_rows, sv_records, _ = serve_pagerank_bench.qps_vs_batch(
+        batch_sizes=(1, 8, 32) if quick else (1, 8, 32, 128),
+        n_queries=64 if quick else 256,
+        rows=60 if quick else 100, cols=60 if quick else 100)
+    _emit(sections, "ppr_serving_qps_vs_batch", sv_rows)
+
     if not quick:
         _emit(sections, "figure3_err_vs_rounds (NACA0015 stand-in)",
               paper_tables.fig3_err_vs_rounds_and_time())
@@ -76,8 +85,6 @@ def main(argv=None) -> None:
         _emit(sections, "kernel_spmm_formats", kernels_bench.spmm_formats())
         _emit(sections, "kernel_cheb_fused_update",
               kernels_bench.cheb_fused_update())
-        _emit(sections, "ppr_serving_qps_vs_batch",
-              serve_pagerank_bench.qps_vs_batch())
 
     if args.json:
         payload = {
@@ -92,6 +99,7 @@ def main(argv=None) -> None:
             "adaptive_compare": ad_records,
             "sharded_compare": sh_records,
             "update_churn": uc_records,
+            "serve_pagerank": sv_records,
             "sections": sections,
         }
         with open(args.json, "w") as f:

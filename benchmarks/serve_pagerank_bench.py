@@ -1,6 +1,7 @@
-"""PPR serving throughput: queries/sec vs micro-batch width B.
+"""PPR serving throughput + tail latency: queries/sec vs micro-batch width.
 
     PYTHONPATH=src python -m benchmarks.serve_pagerank_bench [--quick]
+        [--metrics-json PATH]
 
 The batching win this measures: B personalization columns drain through ONE
 cpaa_fixed call (SpMM, B columns per pass) instead of B separate solves
@@ -11,16 +12,28 @@ full — B=128 is the natural operating point).
 
 Cache capacity is 0 and every query has distinct seeds, so the numbers are
 pure solver throughput, no cache effects.
+
+Beyond the mean, every row reports histogram-derived p50/p99/p999 per-query
+latency and the mean per-stage split (queue / batch_form / solve_dispatch /
+solve_device / materialize) from the service's own `repro.obs` metrics —
+the same numbers a production scrape would see. A final `serve_overhead`
+record times the identical workload with full metrics detail vs
+counters-only (`ServeMetrics(detail=False)`): docs/observability.md budgets
+that overhead at <5% of us_per_query, and benchmarks/check_regression.py
+tracks the p99 rows so tail regressions gate CI, not just mean shifts.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 import numpy as np
 
 from repro.graph import generators
-from repro.serve import GraphRegistry, PageRankService, PPRQuery
+from repro.serve import GraphRegistry, PageRankService, PPRQuery, ServeMetrics
+
+STAGES = ("queue", "batch_form", "solve_dispatch", "solve_device",
+          "materialize")
 
 
 def _make_queries(n: int, n_queries: int, seed: int = 0):
@@ -32,53 +45,135 @@ def _make_queries(n: int, n_queries: int, seed: int = 0):
     return [(int(x), int((x + o) % n)) for x, o in zip(a, off)]
 
 
-def qps_vs_batch(batch_sizes=(1, 8, 32, 128), n_queries: int = 256,
-                 rows: int = 100, cols: int = 100, tol: float = 1e-4):
-    g = generators.tri_mesh(rows, cols)
-    out = [("B", "queries", "wall_s", "qps", "us_per_query", "speedup_vs_B1")]
-    base_qps = None
-    for b in batch_sizes:
-        registry = GraphRegistry()
-        registry.register("g", g)
-        svc = PageRankService(registry, max_batch=b, cache_capacity=0,
-                              max_top_k=8)
-        seeds = _make_queries(g.n, n_queries, seed=b)
-        # warm-up: compile every bucket shape the timed run will hit
-        # (full groups of B, plus the remainder group) off the clock
-        warm_sizes = set()
-        if n_queries >= b:
-            warm_sizes.add(b)
-        if n_queries % b:
-            warm_sizes.add(n_queries % b)
-        for size in warm_sizes:
-            for i in range(size):
-                svc.submit(PPRQuery(qid=-1 - i, graph="g",
-                                    seeds=(i % g.n, (i * 7 + 1) % g.n),
-                                    tol=tol, top_k=8))
-            svc.run_until_drained()
-
-        t0 = time.perf_counter()
-        for i, s in enumerate(seeds):
-            svc.submit(PPRQuery(qid=i, graph="g", seeds=s, tol=tol, top_k=8))
+def _run_workload(g, b: int, n_queries: int, tol: float, detail: bool,
+                  seed: int):
+    """One timed pass: fresh service, warmed buckets, metrics reset after
+    warm-up so the histograms hold exactly the timed queries. Returns
+    (wall_s, service)."""
+    registry = GraphRegistry()
+    registry.register("g", g)
+    svc = PageRankService(registry, max_batch=b, cache_capacity=0,
+                          max_top_k=8, metrics=ServeMetrics(detail=detail))
+    seeds = _make_queries(g.n, n_queries, seed=seed)
+    # warm-up: compile every bucket shape the timed run will hit
+    # (full groups of B, plus the remainder group) off the clock
+    warm_sizes = set()
+    if n_queries >= b:
+        warm_sizes.add(b)
+    if n_queries % b:
+        warm_sizes.add(n_queries % b)
+    for size in warm_sizes:
+        for i in range(size):
+            svc.submit(PPRQuery(qid=-1 - i, graph="g",
+                                seeds=(i % g.n, (i * 7 + 1) % g.n),
+                                tol=tol, top_k=8))
         svc.run_until_drained()
-        dt = time.perf_counter() - t0
+    svc.metrics.registry.reset()   # drop warm-up observations
 
+    t0 = time.perf_counter()
+    for i, s in enumerate(seeds):
+        svc.submit(PPRQuery(qid=i, graph="g", seeds=s, tol=tol, top_k=8))
+    svc.run_until_drained()
+    return time.perf_counter() - t0, svc
+
+
+def qps_vs_batch(batch_sizes=(1, 8, 32, 128), n_queries: int = 256,
+                 rows: int = 100, cols: int = 100, tol: float = 1e-4,
+                 overhead_repeats: int = 3):
+    """Returns (csv_rows, records): the human table plus the structured
+    per-B records (histogram percentiles + stage means) and one
+    metrics-on/off overhead record that BENCH_pagerank.json archives."""
+    g = generators.tri_mesh(rows, cols)
+    out = [("B", "queries", "wall_s", "qps", "us_per_query", "p50_us",
+            "p99_us", "p999_us", "solve_device_us", "speedup_vs_B1")]
+    records = []
+    base_qps = None
+    last_svc = None
+    for b in batch_sizes:
+        dt, svc = _run_workload(g, b, n_queries, tol, detail=True, seed=b)
+        last_svc = svc
+        lat = svc.metrics.latency.labels(graph="g", disposition="solved")
+        p50, p99, p999 = (q * 1e6 for q in lat.percentiles((50.0, 99.0,
+                                                            99.9)))
+        stage_us = {}
+        for stage in STAGES:
+            h = svc.metrics.stage.labels(stage=stage)
+            stage_us[stage] = h.mean * 1e6 if h.count else 0.0
         qps = n_queries / dt
         base_qps = base_qps or qps
+        us_q = dt / n_queries * 1e6
         out.append((b, n_queries, round(dt, 3), round(qps, 1),
-                    round(dt / n_queries * 1e6, 1), round(qps / base_qps, 2)))
-    return out
+                    round(us_q, 1), round(p50, 1), round(p99, 1),
+                    round(p999, 1), round(stage_us["solve_device"], 1),
+                    round(qps / base_qps, 2)))
+        records.append({
+            "family": "serve_pagerank", "graph": f"tri_mesh_{rows}x{cols}",
+            "B": int(b), "n_queries": int(n_queries),
+            "wall_s": dt, "qps": qps, "us_per_query": us_q,
+            "p50_us": p50, "p99_us": p99, "p999_us": p999,
+            "stage_us": {k: round(v, 2) for k, v in stage_us.items()},
+            "solves": svc.stats["solves"],
+        })
+
+    # metrics-on vs counters-only on the largest batch point. A percent-
+    # level wall-clock comparison drowns in scheduler jitter unless the
+    # runs are (a) long enough to span many ticks, (b) interleaved so slow
+    # drift (thermal, background load) hits both sides equally, and
+    # (c) reduced by min — the least-perturbed run of each side.
+    b_ref = batch_sizes[-1]
+    n_over = 4 * n_queries
+    on_times, off_times = [], []
+    for r in range(overhead_repeats):
+        on_times.append(_run_workload(g, b_ref, n_over, tol, detail=True,
+                                      seed=99 + r)[0])
+        off_times.append(_run_workload(g, b_ref, n_over, tol, detail=False,
+                                       seed=99 + r)[0])
+    on, off = min(on_times), min(off_times)
+    overhead_pct = (on / off - 1.0) * 100.0
+    out.append(("overhead", f"B={b_ref}",
+                round(on / n_over * 1e6, 1),
+                round(off / n_over * 1e6, 1),
+                f"{overhead_pct:+.2f}%", "", "", "", "", ""))
+    records.append({
+        "family": "serve_overhead", "B": int(b_ref),
+        "n_queries": int(n_over),
+        "detail_on_us_per_query": on / n_over * 1e6,
+        "detail_off_us_per_query": off / n_over * 1e6,
+        "overhead_pct": overhead_pct,
+        "budget_pct": 5.0,
+    })
+    return out, records, last_svc
 
 
-def main():
-    quick = "--quick" in sys.argv
-    n_queries = 64 if quick else 256
-    rows = cols = 60 if quick else 100
-    table = qps_vs_batch(n_queries=n_queries, rows=rows, cols=cols)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the last run's obs snapshot (metrics + "
+                         "convergence + traces) as JSON")
+    args = ap.parse_args(argv)
+    n_queries = 64 if args.quick else 256
+    rows = cols = 60 if args.quick else 100
+    batch_sizes = (1, 8, 32) if args.quick else (1, 8, 32, 128)
+    table, records, svc = qps_vs_batch(batch_sizes=batch_sizes,
+                                       n_queries=n_queries, rows=rows,
+                                       cols=cols)
     print("\n## ppr_serving_qps_vs_batch "
           f"(tri_mesh {rows}x{cols}, {n_queries} distinct queries)")
     for row in table:
         print(",".join(str(x) for x in row))
+    overhead = next(r for r in records if r["family"] == "serve_overhead")
+    print(f"metrics overhead: {overhead['overhead_pct']:+.2f}% of "
+          f"us_per_query (budget <{overhead['budget_pct']:.0f}%)")
+    if args.metrics_json:
+        from repro.obs.export import write_snapshot
+        write_snapshot(args.metrics_json, svc.metrics.registry,
+                       convergence=svc.metrics.convergence,
+                       tracer=svc.metrics.tracer,
+                       meta={"bench": "serve_pagerank", "quick": args.quick,
+                             "n_queries": n_queries,
+                             "graph": f"tri_mesh_{rows}x{cols}"})
+        print(f"metrics snapshot -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

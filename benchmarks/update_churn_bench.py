@@ -15,7 +15,10 @@ selective invalidation has the most to retain):
   * **us_per_update** — wall time of one full `update_graph` call: apply +
     hop-mask computation + selective invalidation + refresh queueing. The
     invalidation side is identical work in both modes, so this is the
-    end-to-end number a serving deployment sees per batch.
+    end-to-end number a serving deployment sees per batch. Per-update
+    latencies also feed a `repro.obs` log-bucketed histogram, so each
+    record archives p50/p99/p999_update_us alongside the mean — rebuilds
+    that spike only occasionally show up in the tail, not the mean.
   * **retention** — fraction of cached results that survive an update
     under selective invalidation (radius-2 hop mask around the delta's
     touched vertices); the blanket path retains 0.
@@ -40,6 +43,7 @@ import numpy as np
 
 from repro.graph import generators
 from repro.graph.structure import Graph
+from repro.obs.metrics import Histogram
 from repro.serve import GraphRegistry, PageRankService, PPRQuery
 
 
@@ -88,8 +92,8 @@ def update_churn(quick: bool = False, batch_edges: int | None = None):
     warmup, batches = batches[0], batches[1:]
 
     rows = [("family", "engine", "mode", "batch_edges", "updates",
-             "us_per_apply", "us_per_update", "retention", "qps_churn",
-             "parity_l1", "apply_speedup", "update_speedup")]
+             "us_per_apply", "us_per_update", "p99_update_us", "retention",
+             "qps_churn", "parity_l1", "apply_speedup", "update_speedup")]
     records = []
     results = {}
     for engine, mode in (("coo", "rebuild"), ("coo", "incremental"),
@@ -121,16 +125,23 @@ def update_churn(quick: bool = False, batch_edges: int | None = None):
         update_s = 0.0
         n_updates = 0
         served = 0
+        # same log-bucketed sketch the serving metrics use, so the p50/p99
+        # archived here are directly comparable to a production scrape
+        update_hist = Histogram()
         t_all = time.perf_counter()
         for i, batch in enumerate(batches):
             t0 = time.perf_counter()
             svc.update_graph("community", insert=batch)
-            update_s += time.perf_counter() - t0
+            d = time.perf_counter() - t0
+            update_s += d
+            update_hist.observe(d)
             n_updates += 1
             if i % 2 == 1:                        # half round-trip back out
                 t0 = time.perf_counter()
                 svc.update_graph("community", delete=batch)
-                update_s += time.perf_counter() - t0
+                d = time.perf_counter() - t0
+                update_s += d
+                update_hist.observe(d)
                 n_updates += 1
             for s in query_seeds:                 # churned mixed workload
                 svc.submit(PPRQuery(qid=qid, graph="community", seeds=s))
@@ -142,10 +153,15 @@ def update_churn(quick: bool = False, batch_edges: int | None = None):
         retention = st["cache_retained"] / max(
             st["cache_retained"] + st["cache_dropped"], 1)
         svc.registry.apply_updates = orig_apply
+        p50, p99, p999 = (q * 1e6 for q in
+                          update_hist.percentiles((50.0, 99.0, 99.9)))
         results[(engine, mode)] = {
             "svc": svc,
             "us_per_apply": sum(apply_times) / len(apply_times) * 1e6,
             "us_per_update": update_s / n_updates * 1e6,
+            "p50_update_us": p50,
+            "p99_update_us": p99,
+            "p999_update_us": p999,
             "retention": retention,
             "qps": served / wall,
         }
@@ -172,6 +188,7 @@ def update_churn(quick: bool = False, batch_edges: int | None = None):
                          n_cycles + n_cycles // 2,
                          round(r["us_per_apply"], 1),
                          round(r["us_per_update"], 1),
+                         round(r["p99_update_us"], 1),
                          round(r["retention"], 3),
                          round(r["qps"], 1), f"{r['parity_l1']:.2e}",
                          round(base_apply / r["us_per_apply"], 2),
@@ -181,6 +198,9 @@ def update_churn(quick: bool = False, batch_edges: int | None = None):
                             "n": g.n, "m": g.m,
                             "us_per_apply": r["us_per_apply"],
                             "us_per_update": r["us_per_update"],
+                            "p50_update_us": r["p50_update_us"],
+                            "p99_update_us": r["p99_update_us"],
+                            "p999_update_us": r["p999_update_us"],
                             "retention_rate": r["retention"],
                             "qps_churn": r["qps"],
                             "parity_l1": r["parity_l1"]})

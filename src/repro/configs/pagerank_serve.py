@@ -56,6 +56,11 @@ class PPRServeConfig:
     # scores via power_refine (0 = off); refresh_rounds power rounds each
     refresh_batch: int = 8
     refresh_rounds: int = 8
+    # observability depth (repro.obs): True arms latency/stage histograms,
+    # per-query lifecycle traces and convergence telemetry; False keeps
+    # only the counters behind the `stats` property. docs/observability.md
+    # budgets the detail layer at <5% of us_per_solve.
+    metrics_detail: bool = True
 
 
 def full_config() -> PPRServeConfig:
@@ -77,7 +82,7 @@ def serve_config(smoke: bool = False) -> PPRServeConfig:
 def make_service(cfg: PPRServeConfig):
     """Registry with every configured graph warm + the service over it."""
     from repro.serve.graph_registry import GraphRegistry
-    from repro.serve.pagerank_service import PageRankService
+    from repro.serve.pagerank_service import PageRankService, ServeMetrics
     reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch,
                         grid=cfg.mesh_grid,
                         partition_lane=cfg.partition_lane,
@@ -91,7 +96,8 @@ def make_service(cfg: PPRServeConfig):
                           adaptive_chunk=cfg.adaptive_chunk,
                           invalidation_radius=cfg.invalidation_radius,
                           refresh_batch=cfg.refresh_batch,
-                          refresh_rounds=cfg.refresh_rounds)
+                          refresh_rounds=cfg.refresh_rounds,
+                          metrics=ServeMetrics(detail=cfg.metrics_detail))
     reg.schedule(cfg.c, cfg.tol)  # precompute the coefficient vector
     return svc
 

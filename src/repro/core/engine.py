@@ -93,10 +93,34 @@ __all__ = [
     "select_engine",
     "factor_grid",
     "ENGINE_MODES",
+    "apply_counts",
+    "reset_apply_counts",
 ]
 
 ENGINE_MODES = ("auto", "coo", "block_ell", "fused", "sharded_1d",
                 "sharded_2d")
+
+# Per-engine-class apply() invocation counts. apply() runs at TRACE time
+# under jit, so in a jitted serving loop these count COMPILATIONS of the
+# solve, not executions — which makes them a retrace detector: a warmed
+# service holds them flat, and growth in steady state means jit cache
+# misses (shape or pytree churn leaking into the hot path). In eager mode
+# they count real SpMM executions. tests/ and the serve benches read them
+# through `apply_counts()`.
+APPLY_COUNTS: dict[str, int] = {}
+
+
+def _count_apply(name: str) -> None:
+    APPLY_COUNTS[name] = APPLY_COUNTS.get(name, 0) + 1
+
+
+def apply_counts() -> dict[str, int]:
+    """Copy of the per-engine apply() trace/execution counters."""
+    return dict(APPLY_COUNTS)
+
+
+def reset_apply_counts() -> None:
+    APPLY_COUNTS.clear()
 
 
 def _default_cheb_round(y, t, acc, ck):
@@ -130,6 +154,7 @@ class CooEngine:
         return x
 
     def apply(self, x: jax.Array) -> jax.Array:
+        _count_apply("coo")
         return spmv(self.dg, x) if x.ndim == 1 else spmm(self.dg, x)
 
     def cheb_round(self, y, t, acc, ck):
@@ -244,6 +269,7 @@ class BlockEllEngine:
         return x[self.inv_perm]
 
     def apply(self, x: jax.Array) -> jax.Array:
+        _count_apply(self.name)
         return bsr_spmm(self.block_cols, self.values, x,
                         use_kernel=self.use_kernel, interpret=self.interpret)
 
@@ -392,6 +418,7 @@ class Sharded1DEngine(ShardedEngine):
         return x[: self.n_orig] if self.n_orig != self.n_pad else x
 
     def apply(self, x: jax.Array) -> jax.Array:
+        _count_apply(self.name)
         vec_spec = self._vec_spec(x.ndim)
         edge_spec = P(self.axes)
 
@@ -514,6 +541,7 @@ class Sharded2DEngine(ShardedEngine):
         return x[self.inv_perm][: self.n_orig]
 
     def apply(self, x: jax.Array) -> jax.Array:
+        _count_apply(self.name)
         vec_spec = self._vec_spec(x.ndim)
         edge_spec = P(self.row_axis, self.col_axis)
 

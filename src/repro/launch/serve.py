@@ -82,43 +82,59 @@ def serve_pagerank(mod, args):
                         c=q.c, tol=q.tol, top_k=q.top_k)
                for j, q in enumerate(queries[:max(1, args.requests // 10)])]
 
+    from repro.obs import MetricsServer, render_summary, validate_snapshot
+    from repro.obs.trace import profiled
+
+    server = None
+    if args.metrics_port is not None:
+        server = MetricsServer(svc.metrics.registry, port=args.metrics_port,
+                               convergence=svc.metrics.convergence,
+                               tracer=svc.metrics.tracer).start()
+        print(f"metrics: http://127.0.0.1:{server.port}/metrics "
+              f"(and /metrics.json)")
+
     t0 = time.perf_counter()
     results = {}
-    for q in queries:
-        svc.submit(q)
-    results.update(svc.run_until_drained())   # warm cache before the churn
-    for u in range(args.updates):
-        name = names[u % len(names)]
-        # rg.n, not rg.host.n: the vertex count is fixed at registration and
-        # reading .host after an in-place patch would force the lazy host
-        # Graph to materialize per batch
-        n = svc.registry.get(name).n
-        edge = (int(rng.integers(0, n // 2)), int(rng.integers(n // 2, n)))
-        svc.update_graph(name, insert=[edge])
-    for q in repeats:
-        svc.submit(q)
-    results.update(svc.run_until_drained())
+    with profiled(args.profile_dir):
+        for q in queries:
+            svc.submit(q)
+        results.update(svc.run_until_drained())  # warm cache before the churn
+        for u in range(args.updates):
+            name = names[u % len(names)]
+            # rg.n, not rg.host.n: the vertex count is fixed at registration
+            # and reading .host after an in-place patch would force the lazy
+            # host Graph to materialize per batch
+            n = svc.registry.get(name).n
+            edge = (int(rng.integers(0, n // 2)),
+                    int(rng.integers(n // 2, n)))
+            svc.update_graph(name, insert=[edge])
+        for q in repeats:
+            svc.submit(q)
+        results.update(svc.run_until_drained())
     dt = time.perf_counter() - t0
 
-    total = len(results)
-    st = svc.stats
-    print(f"served {total} PPR queries in {dt:.2f}s ({total / dt:.1f} q/s); "
-          f"{st['solves']} batched solves for {st['solved_queries']} queries "
-          f"(avg B={st['solved_queries'] / max(st['solves'], 1):.1f}), "
-          f"{st['cache_hits']} cache hits, {st['updates']} graph updates")
-    mode = "adaptive (residual-controlled)" if svc.adaptive else "fixed"
-    saved = st["rounds_bound"] - st["rounds_used"]
-    pct = 100.0 * saved / max(st["rounds_bound"], 1)
-    print(f"rounds [{mode}]: {st['rounds_used']} used vs "
-          f"{st['rounds_bound']} a-priori bound "
-          f"({saved} saved, {pct:.0f}%)")
-    if st["updates"]:
-        print(f"updates [{svc.registry.update_mode}]: {st['updates']} "
-              f"batches ({st['incremental_updates']} in-place, "
-              f"{st['noop_updates']} no-op); cache "
-              f"{st['cache_dropped']} dropped / {st['cache_retained']} "
-              f"retained, {st['refreshes']} background refreshes")
-    print(f"cache: {svc.cache.stats()}")
+    # one snapshot feeds every output: the CLI summary below, the JSON
+    # dump, and whatever the /metrics endpoint serves while we slept
+    mode = "adaptive" if svc.adaptive else "fixed"
+    snap = svc.metrics.snapshot(meta={
+        "elapsed_s": dt, "arch": args.arch, "mode": mode,
+        "update_mode": svc.registry.update_mode, "engines": engines,
+        "backend": jax.default_backend(),
+        "served": len(results),
+    })
+    if args.metrics_json:
+        from repro.obs.export import write_snapshot
+        write_snapshot(args.metrics_json, svc.metrics.registry,
+                       convergence=svc.metrics.convergence,
+                       tracer=svc.metrics.tracer, meta=snap["meta"])
+        errs = validate_snapshot(snap)
+        if errs:
+            raise SystemExit("metrics snapshot failed validation:\n  "
+                             + "\n  ".join(errs))
+        print(f"metrics snapshot -> {args.metrics_json}")
+    print(render_summary(snap))
+    if server is not None:
+        server.stop()
 
 
 def main(argv=None):
@@ -161,6 +177,18 @@ def main(argv=None):
                          "hops of an update's touched vertices and retain "
                          "the rest; negative = blanket flush (pagerank "
                          "only; default from config)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text at /metrics and the JSON "
+                         "snapshot at /metrics.json on this port while the "
+                         "workload runs (0 = ephemeral; pagerank only)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the final metrics snapshot (metrics + "
+                         "convergence telemetry + recent traces) as JSON "
+                         "(pagerank only)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the workload in jax.profiler.trace writing "
+                         "to DIR for TensorBoard/Perfetto deep dives "
+                         "(pagerank only)")
     args = ap.parse_args(argv)
 
     mod = get(args.arch)

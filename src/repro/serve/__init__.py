@@ -1,4 +1,5 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.graph_registry import GraphRegistry, RegisteredGraph
-from repro.serve.pagerank_service import PageRankService, PPRQuery, PPRResult
+from repro.serve.pagerank_service import (PageRankService, PPRQuery,
+                                          PPRResult, ServeMetrics)
 from repro.serve.result_cache import ResultCache

@@ -49,6 +49,7 @@ boundary, not on every batch.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -60,6 +61,7 @@ from repro.core.engine import CooEngine, select_engine
 from repro.graph.ops import (DeviceGraph, EdgeSlots, device_graph,
                              patch_device_graph)
 from repro.graph.structure import EdgeDelta, Graph, edge_delta
+from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
 
 __all__ = ["AdaptiveSchedule", "RegisteredGraph", "GraphRegistry",
            "UPDATE_MODES"]
@@ -160,6 +162,44 @@ def _edges_to_keys(n: int, edges) -> np.ndarray:
     return np.unique(lo * n + hi)
 
 
+class _RegistryObs:
+    """The registry's instrument bundle. Built against NULL_REGISTRY by
+    default (every call a no-op), swapped for live families when a metrics
+    registry is bound — the service binds its own at construction so
+    build/update/BFS timings land next to the serve metrics."""
+
+    def __init__(self, reg: MetricsRegistry):
+        self.build_seconds = reg.histogram(
+            "registry_build_seconds",
+            "DeviceGraph + engine (re)build duration per (graph, epoch)",
+            ("graph",))
+        self.update_seconds = reg.histogram(
+            "registry_update_seconds",
+            "apply_updates duration by effective path", ("graph", "path"))
+        self.hop_seconds = reg.histogram(
+            "registry_hop_bfs_seconds",
+            "hop_neighborhood BFS duration", ("graph",))
+        self.epoch = reg.gauge(
+            "graph_epoch", "current epoch per registered graph", ("graph",))
+        self.edges = reg.gauge(
+            "graph_edges", "undirected edge count per registered graph",
+            ("graph",))
+        self.engine_info = reg.gauge(
+            "graph_engine_info",
+            "1 for the engine class currently serving the graph",
+            ("graph", "engine"))
+
+    def set_graph_gauges(self, rg: "RegisteredGraph") -> None:
+        self.epoch.labels(graph=rg.name).set(rg.epoch)
+        self.edges.labels(graph=rg.name).set(
+            len(rg.keys) if rg.keys is not None else rg.host.m)
+        current = type(rg.engine).__name__
+        for values, inst in self.engine_info.children():
+            if values[0] == rg.name:    # a rebuild may have switched class
+                inst.set(0.0)
+        self.engine_info.labels(graph=rg.name, engine=current).set(1.0)
+
+
 class GraphRegistry:
     """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache."""
 
@@ -183,6 +223,15 @@ class GraphRegistry:
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
         self._adaptive: dict[tuple[float, float, int | None], AdaptiveSchedule] = {}
+        self._obs = _RegistryObs(NULL_REGISTRY)
+
+    def bind_metrics(self, registry: MetricsRegistry) -> None:
+        """Point the registry's instrumentation at a live MetricsRegistry
+        (idempotent; called by PageRankService with its own). Gauges for
+        already-registered graphs are published immediately."""
+        self._obs = _RegistryObs(registry)
+        for rg in self._graphs.values():
+            self._obs.set_graph_gauges(rg)
 
     def _build(self, g: Graph):
         """(DeviceGraph, engine, EdgeSlots) for one epoch of a graph. The
@@ -208,10 +257,14 @@ class GraphRegistry:
     def register(self, name: str, g: Graph) -> RegisteredGraph:
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
+        t0 = time.perf_counter()
         dg, eng, slots = self._build(g)
+        self._obs.build_seconds.labels(graph=name).observe(
+            time.perf_counter() - t0)
         rg = RegisteredGraph(name=name, host=g, dg=dg, engine=eng,
                              keys=_undirected_keys(g), slots=slots)
         self._graphs[name] = rg
+        self._obs.set_graph_gauges(rg)
         return rg
 
     def get(self, name: str) -> RegisteredGraph:
@@ -239,6 +292,7 @@ class GraphRegistry:
         reports which edges/vertices moved — the serving layer keys its
         selective cache invalidation off `last_delta.touched`.
         """
+        t0 = time.perf_counter()
         rg = self.get(name)
         n = rg.n
         ins = _edges_to_keys(n, insert) if len(insert) else \
@@ -251,6 +305,8 @@ class GraphRegistry:
         rg.last_delta = delta
         rg.last_update_incremental = False
         if delta.is_noop:
+            self._obs.update_seconds.labels(graph=name, path="noop").observe(
+                time.perf_counter() - t0)
             return rg
 
         patch = None
@@ -280,10 +336,17 @@ class GraphRegistry:
                              delta.inserted)
             g_new = Graph.from_undirected_edges(n, keys // n, keys % n)
             rg.host = g_new
+            t_build = time.perf_counter()
             rg.dg, rg.engine, rg.slots = self._build(g_new)
+            self._obs.build_seconds.labels(graph=name).observe(
+                time.perf_counter() - t_build)
             rg.keys = keys
         rg.epoch += 1
         rg._csr_cache = None
+        path = "incremental" if rg.last_update_incremental else "rebuild"
+        self._obs.update_seconds.labels(graph=name, path=path).observe(
+            time.perf_counter() - t0)
+        self._obs.set_graph_gauges(rg)
         return rg
 
     def hop_neighborhood(self, name: str, vertices, radius: int,
@@ -303,6 +366,7 @@ class GraphRegistry:
         entries seeded inside the mask are the ones a localized edge delta
         can have perturbed beyond tolerance.
         """
+        t0 = time.perf_counter()
         rg = self.get(name)
         n = rg.n
         mask = np.zeros(n, bool)
@@ -359,6 +423,8 @@ class GraphRegistry:
                 hops_done += 1
                 if extra > 0 and hops_done == radius and inner is None:
                     inner = mask.copy()
+        self._obs.hop_seconds.labels(graph=name).observe(
+            time.perf_counter() - t0)
         if extra <= 0:
             return mask
         return (mask if inner is None else inner), mask

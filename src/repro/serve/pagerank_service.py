@@ -12,13 +12,14 @@ core per tick):
     drains it through ONE jitted `cpaa_fixed` call on the graph's cached
     solve engine (COO segment-sum or block-ELL Pallas SpMM, picked by the
     registry per epoch — never rebuilt on the tick path): B queries cost
-    one batched MXU pass instead of B separate solves;
+    one batched MXU pass instead of B separate solves. Identical in-flight
+    queries collapse to one personalization column (each still answered and
+    counted individually);
   * with `adaptive=True` the tick solves through the residual-controlled
     `cpaa_adaptive_fixed` instead: per-query columns that converge stop
     feeding the SpMM, and the tick exits as soon as the measured L1
     residual of every live column reaches tol — never past the a-priori
-    Formula 8 round bound, which stays the hard cap. The stats counters
-    `rounds_used` / `rounds_bound` record the per-tick savings;
+    Formula 8 round bound, which stays the hard cap;
   * batch widths are padded up to power-of-two buckets so XLA compiles a
     handful of shapes once and every later tick reuses them;
   * results come back as ranked top-k vertex lists (lax.top_k on device),
@@ -33,10 +34,25 @@ core per tick):
     (`refresh_tick`) through a warm-started power_refine pass. A no-op
     batch (duplicate insert, absent delete) changes nothing and flushes
     nothing. Staleness stays structural, not timed.
+
+Observability (`repro.obs`, see docs/observability.md): every counter the
+old flat `stats` dict held is now a labeled metric in a `ServeMetrics`
+bundle — the `stats` property derives the same dict from metric totals, so
+existing readers keep working. Each query is counted at DISPOSITION time,
+exactly once, as one of cache_hit | solved | dropped (the invariant
+`queries == cache_hits + solved_queries + dropped_queries` is structural).
+With `ServeMetrics(detail=True)` (the default) the service additionally
+records log-bucketed latency histograms, per-query lifecycle traces
+(submit -> queue -> batch_form -> solve_dispatch -> solve_device ->
+materialize, the device span fenced via `jax.block_until_ready` so host
+dispatch and device execution never alias), and per-tick convergence
+telemetry (rounds_used vs the Formula 8 bound, residual-at-exit, converged
+column fractions). `detail=False` keeps only the counters.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
@@ -46,10 +62,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pagerank import cpaa_adaptive_fixed, cpaa_fixed, power_refine
+from repro.obs import (ConvergenceLog, MetricsRegistry, NULL_REGISTRY,
+                       TickTelemetry, Tracer, UpdateTelemetry)
+from repro.obs import export as obs_export
 from repro.serve.graph_registry import GraphRegistry
 from repro.serve.result_cache import ResultCache
 
-__all__ = ["PPRQuery", "PPRResult", "PageRankService"]
+__all__ = ["PPRQuery", "PPRResult", "PageRankService", "ServeMetrics"]
 
 
 @dataclass(frozen=True)
@@ -85,7 +104,88 @@ class PPRResult:
     indices: np.ndarray      # [top_k] int32, ranked by descending score
     scores: np.ndarray       # [top_k] float32, normalized PPR mass
     cached: bool = False
-    batch_size: int = 0      # live queries in the solve that produced this
+    batch_size: int = 0      # distinct columns in the solve that produced this
+
+
+class ServeMetrics:
+    """The service's observability bundle: metric families + tracer +
+    convergence log, all hanging off one `MetricsRegistry`.
+
+    `detail=True` (default) arms the full layer — latency/stage histograms,
+    per-query traces, convergence series. `detail=False` keeps only the
+    counters (the histograms come from a disabled registry and the tracer
+    hands out null traces), which is the metrics-off operating point the
+    <5% overhead budget in docs/observability.md is measured against.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 detail: bool = True, trace_keep: int = 256,
+                 history: int = 1024):
+        self.registry = MetricsRegistry() if registry is None else registry
+        self.detail = detail
+        self.tracer = Tracer(enabled=detail, keep=trace_keep)
+        self.convergence = ConvergenceLog(keep=history)
+        r = self.registry
+        hr = r if detail else NULL_REGISTRY   # detail gates the histograms
+        self.queries = r.counter(
+            "serve_queries_total", "queries accepted by submit()", ("graph",))
+        self.served = r.counter(
+            "serve_served_total",
+            "queries answered, by disposition (cache_hit | solved | dropped)",
+            ("graph", "disposition"))
+        self.solves = r.counter(
+            "serve_solves_total", "batched device solves",
+            ("graph", "engine", "bucket", "mode"))
+        self.ticks = r.counter("serve_ticks_total", "micro-batch ticks")
+        self.padded = r.counter(
+            "serve_padded_columns_total",
+            "pad columns solved (bucket width minus live columns)")
+        self.updates = r.counter(
+            "serve_updates_total", "edge-update batches by effective path",
+            ("graph", "kind"))
+        self.refreshes = r.counter(
+            "serve_refreshes_total", "background warm-start cache refreshes",
+            ("graph",))
+        self.cache_dropped = r.counter(
+            "serve_cache_dropped_total",
+            "cache entries invalidated by graph updates", ("graph",))
+        self.cache_retained = r.counter(
+            "serve_cache_retained_total",
+            "cache entries re-stamped across graph updates", ("graph",))
+        self.rounds_used = r.counter(
+            "serve_rounds_used_total", "solver rounds actually run",
+            ("graph", "mode"))
+        self.rounds_bound = r.counter(
+            "serve_rounds_bound_total",
+            "Formula 8 a-priori round bound accumulated over ticks",
+            ("graph", "mode"))
+        self.queue_depth = r.gauge(
+            "serve_queue_depth", "queries waiting for a tick")
+        self.latency = hr.histogram(
+            "serve_query_latency_seconds", "submit-to-answer e2e latency",
+            ("graph", "disposition"))
+        self.stage = hr.histogram(
+            "serve_stage_seconds",
+            "per-tick stage durations (queue is per-query)", ("stage",))
+        self.refresh_seconds = hr.histogram(
+            "serve_refresh_seconds", "per-entry background refresh duration",
+            ("graph",))
+
+    def _label_total(self, fam, pos: int, value: str) -> float:
+        return sum(inst.value for values, inst in fam.children()
+                   if values[pos] == value)
+
+    def disposition_total(self, disposition: str) -> float:
+        return self._label_total(self.served, 1, disposition)
+
+    def update_kind_total(self, kind: str) -> float:
+        return self._label_total(self.updates, 1, kind)
+
+    def snapshot(self, meta: dict | None = None) -> dict:
+        """JSON-ready snapshot of metrics + convergence + recent traces."""
+        return obs_export.snapshot(self.registry,
+                                   convergence=self.convergence,
+                                   tracer=self.tracer, meta=meta)
 
 
 @partial(jax.jit, static_argnames=("rounds", "k"))
@@ -116,13 +216,14 @@ def _solve_topk_adaptive(engine, p: jax.Array, c, tol, max_rounds: int,
     """Adaptive micro-batch: like _solve_topk, but the round count is
     residual-controlled per column — converged query columns stop feeding
     the SpMM, and the tick ends as soon as every live column reaches tol
-    (never past the a-priori `max_rounds` cap). Also returns the rounds
-    actually run (scalar max over columns) for the service telemetry."""
-    pi, rounds_used, _, _ = cpaa_adaptive_fixed(engine, p, c, tol,
-                                                max_rounds=max_rounds,
-                                                chunk=chunk)
+    (never past the a-priori `max_rounds` cap). Besides the ranked top-k it
+    returns the solver telemetry the convergence log records: rounds
+    actually run (scalar max over columns), per-column rounds-to-converge,
+    and the per-column residual at exit."""
+    pi, rounds_used, col_rounds, resid = cpaa_adaptive_fixed(
+        engine, p, c, tol, max_rounds=max_rounds, chunk=chunk)
     scores, idx = jax.lax.top_k(pi.T, k)
-    return idx.astype(jnp.int32), scores, rounds_used
+    return idx.astype(jnp.int32), scores, rounds_used, col_rounds, resid
 
 
 class PageRankService:
@@ -133,7 +234,8 @@ class PageRankService:
                  adaptive: bool = False, adaptive_chunk: int | None = None,
                  invalidation_radius: int | None = None,
                  refresh_batch: int = 0, refresh_rounds: int = 8,
-                 refresh_margin: int = 1):
+                 refresh_margin: int = 1,
+                 metrics: ServeMetrics | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.registry = registry
@@ -168,7 +270,8 @@ class PageRankService:
         # keys drop first, which is also the superseded-soonest end
         self._refresh: deque[tuple] = deque(maxlen=4096)
         self.cache = ResultCache(cache_capacity)
-        self._pending: deque[PPRQuery] = deque()
+        # pending entries: (query, submit perf_counter, lifecycle trace)
+        self._pending: deque[tuple[PPRQuery, float, object]] = deque()
         self._results: dict[int, PPRResult] = {}
         # power-of-two batch buckets: bounded set of compiled shapes
         self._buckets = []
@@ -177,15 +280,37 @@ class PageRankService:
             self._buckets.append(b)
             b *= 2
         self._buckets.append(max_batch)
-        # rounds_used / rounds_bound: per-tick rounds actually run vs the
-        # a-priori Formula 8 count — equal on the fixed path, rounds_used <=
-        # rounds_bound when adaptive
-        self.stats = {"queries": 0, "cache_hits": 0, "solves": 0,
-                      "solved_queries": 0, "ticks": 0, "padded_columns": 0,
-                      "updates": 0, "rounds_used": 0, "rounds_bound": 0,
-                      "noop_updates": 0, "incremental_updates": 0,
-                      "cache_dropped": 0, "cache_retained": 0,
-                      "refreshes": 0}
+        self.metrics = ServeMetrics() if metrics is None else metrics
+        # the registry shares the service's metric registry (build/update/
+        # BFS timings, per-graph gauges land next to the serve metrics)
+        registry.bind_metrics(self.metrics.registry)
+        self._submitted = 0     # total accepted queries (qid autogeneration)
+        self._tick_no = 0
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat counter dict, derived from the metric families.
+        Same keys and meanings as the old ad-hoc dict, plus
+        `dropped_queries` (queries discarded by an overrun drain with
+        on_overrun="drop")."""
+        m = self.metrics
+        return {
+            "queries": int(m.queries.total()),
+            "cache_hits": int(m.disposition_total("cache_hit")),
+            "solves": int(m.solves.total()),
+            "solved_queries": int(m.disposition_total("solved")),
+            "dropped_queries": int(m.disposition_total("dropped")),
+            "ticks": int(m.ticks.total()),
+            "padded_columns": int(m.padded.total()),
+            "updates": int(m.updates.total()),
+            "rounds_used": int(m.rounds_used.total()),
+            "rounds_bound": int(m.rounds_bound.total()),
+            "noop_updates": int(m.update_kind_total("noop")),
+            "incremental_updates": int(m.update_kind_total("incremental")),
+            "cache_dropped": int(m.cache_dropped.total()),
+            "cache_retained": int(m.cache_retained.total()),
+            "refreshes": int(m.refreshes.total()),
+        }
 
     # ---- submission -------------------------------------------------------
     def submit(self, q: PPRQuery) -> PPRResult | None:
@@ -198,14 +323,32 @@ class PageRankService:
         if q.top_k > self.max_top_k:
             raise ValueError(f"top_k {q.top_k} exceeds service max_top_k "
                              f"{self.max_top_k}")
-        self.stats["queries"] += 1
-        hit = self.cache.get(q.key(rg.epoch))
+        m = self.metrics
+        m.queries.labels(graph=q.graph).inc()
+        self._submitted += 1
+        t0 = time.perf_counter()
+        hit = self.cache.lookup(q.key(rg.epoch))
         if hit is not None:
+            # disposition decided here: served from cache, counted once
+            self.cache.count_hit()
             res = self._materialize(q, rg.epoch, *hit, cached=True)
             self._results[q.qid] = res
-            self.stats["cache_hits"] += 1
+            m.served.labels(graph=q.graph, disposition="cache_hit").inc()
+            m.latency.labels(graph=q.graph, disposition="cache_hit").observe(
+                time.perf_counter() - t0)
+            tr = m.tracer.start("query", qid=q.qid, graph=q.graph)
+            tr.mark("submit")
+            tr.begin("cache_hit")
+            tr.end("cache_hit")
+            m.tracer.finish(tr)
             return res
-        self._pending.append(q)
+        # miss is NOT counted yet: this query's disposition (solved at a
+        # later tick, twin-filled cache hit, or dropped) is still open
+        tr = m.tracer.start("query", qid=q.qid, graph=q.graph)
+        tr.mark("submit")
+        tr.begin("queue")
+        self._pending.append((q, t0, tr))
+        m.queue_depth.set(len(self._pending))
         return None
 
     def submit_many(self, queries) -> list[PPRResult]:
@@ -225,39 +368,50 @@ class PageRankService:
         new epoch, and (with the re-solve tick armed) retained entries in
         the near-boundary ring are queued for a warm-started refresh.
         """
+        m = self.metrics
+        t0 = time.perf_counter()
         rg = self.registry.apply_updates(name, insert=insert, delete=delete)
-        self.stats["updates"] += 1
         delta = rg.last_delta
+        edges_changed = (len(delta.inserted) + len(delta.deleted)
+                         if delta is not None else 0)
         if delta is not None and delta.is_noop:
-            self.stats["noop_updates"] += 1
+            m.updates.labels(graph=name, kind="noop").inc()
+            m.convergence.record_update(UpdateTelemetry(
+                graph=name, kind="noop", edges_changed=0, cache_dropped=0,
+                cache_retained=self.cache.count_for(name),
+                duration_s=time.perf_counter() - t0))
             return rg.epoch
-        if rg.last_update_incremental:
-            self.stats["incremental_updates"] += 1
+        kind = "incremental" if rg.last_update_incremental else "rebuild"
+        m.updates.labels(graph=name, kind=kind).inc()
+        dropped = retained = 0
         if self.invalidation_radius is None or delta is None:
             dropped = self.cache.invalidate_graph(name)
-            self.stats["cache_dropped"] += dropped
-            return rg.epoch
-        if self.cache.count_for(name) == 0:
-            return rg.epoch   # nothing cached: skip the hop-mask BFS too
+            m.cache_dropped.labels(graph=name).inc(dropped)
+        elif self.cache.count_for(name) > 0:
+            # one BFS yields both rings: the drop mask and (when the
+            # re-solve tick is armed) the refresh ring refresh_margin hops
+            # further out
+            extra = self.refresh_margin if self.refresh_batch > 0 else 0
+            masks = self.registry.hop_neighborhood(
+                name, delta.touched, self.invalidation_radius, extra=extra)
+            near, ring = masks if extra else (masks, None)
 
-        # one BFS yields both rings: the drop mask and (when the re-solve
-        # tick is armed) the refresh ring refresh_margin hops further out
-        extra = self.refresh_margin if self.refresh_batch > 0 else 0
-        masks = self.registry.hop_neighborhood(
-            name, delta.touched, self.invalidation_radius, extra=extra)
-        near, ring = masks if extra else (masks, None)
+            def drop(key):
+                return any(near[s] for s in key[2])
 
-        def drop(key):
-            return any(near[s] for s in key[2])
-
-        dropped, retained = self.cache.invalidate_selective(name, rg.epoch,
-                                                            drop)
-        self.stats["cache_dropped"] += dropped
-        self.stats["cache_retained"] += len(retained)
-        if ring is not None:
-            for key in retained:
-                if any(ring[s] for s in key[2]):
-                    self._refresh.append(key)
+            dropped, retained_keys = self.cache.invalidate_selective(
+                name, rg.epoch, drop)
+            retained = len(retained_keys)
+            m.cache_dropped.labels(graph=name).inc(dropped)
+            m.cache_retained.labels(graph=name).inc(retained)
+            if ring is not None:
+                for key in retained_keys:
+                    if any(ring[s] for s in key[2]):
+                        self._refresh.append(key)
+        m.convergence.record_update(UpdateTelemetry(
+            graph=name, kind=kind, edges_changed=edges_changed,
+            cache_dropped=dropped, cache_retained=retained,
+            duration_s=time.perf_counter() - t0))
         return rg.epoch
 
     # ---- the background re-solve tick -------------------------------------
@@ -290,17 +444,20 @@ class PageRankService:
         `run_until_drained` calls this after the queue empties when
         `refresh_batch > 0`; callers can also invoke it directly as an idle
         tick."""
+        m = self.metrics
         budget = self.refresh_batch if max_entries is None else max_entries
         done = 0
+        t_all = time.perf_counter()
         while self._refresh and done < budget:
             key = self._refresh.popleft()
             graph, epoch, seeds, c, tol = key
             rg = self.registry.get(graph)
             if epoch != rg.epoch:
                 continue      # a later update superseded this refresh
-            hit = self.cache.get(key, count=False)
+            hit = self.cache.lookup(key)
             if hit is None:
                 continue      # evicted before we got to it
+            t0 = time.perf_counter()
             idx, scores = hit
             n = rg.n
             k = min(self.max_top_k, n)
@@ -315,8 +472,15 @@ class PageRankService:
                 rg.engine, jnp.asarray(x0), jnp.asarray(p), c,
                 rounds=self._refresh_round_count(gap, c, tol), k=k)
             self.cache.put(key, (np.asarray(new_idx), np.asarray(new_scores)))
-            self.stats["refreshes"] += 1
+            m.refreshes.labels(graph=graph).inc()
+            m.refresh_seconds.labels(graph=graph).observe(
+                time.perf_counter() - t0)
             done += 1
+        if done:
+            m.convergence.record_update(UpdateTelemetry(
+                graph=graph, kind="refresh", edges_changed=0,
+                cache_dropped=0, cache_retained=done,
+                duration_s=time.perf_counter() - t_all))
         return done
 
     # ---- the micro-batcher ------------------------------------------------
@@ -326,19 +490,20 @@ class PageRankService:
                 return cap
         return self.max_batch
 
-    def _take_group(self) -> list[PPRQuery]:
+    def _take_group(self) -> list[tuple[PPRQuery, float, object]]:
         """Pop up to max_batch queries sharing the head query's
         (graph, c, tol) — FIFO fairness with opportunistic packing."""
-        head = self._pending[0]
+        head = self._pending[0][0]
         gkey = (head.graph, float(head.c), float(head.tol))
         group, rest = [], deque()
         while self._pending:
-            q = self._pending.popleft()
+            entry = self._pending.popleft()
+            q = entry[0]
             if len(group) < self.max_batch and \
                     (q.graph, float(q.c), float(q.tol)) == gkey:
-                group.append(q)
+                group.append(entry)
             else:
-                rest.append(q)
+                rest.append(entry)
         self._pending = rest
         return group
 
@@ -346,58 +511,151 @@ class PageRankService:
         """Drain one micro-batch through a single jitted solve."""
         if not self._pending:
             return []
-        self.stats["ticks"] += 1
+        m = self.metrics
+        m.ticks.inc()
+        self._tick_no += 1
         group = self._take_group()
-        rg = self.registry.get(group[0].graph)
+        graph = group[0][0].graph
+        rg = self.registry.get(graph)
         epoch = rg.epoch
+        m.queue_depth.set(len(self._pending))
         out: list[PPRResult] = []
 
-        # a twin query may have populated the cache since submission
-        # (count=False: this query already counted its miss at submit time)
-        live: list[PPRQuery] = []
-        for q in group:
-            hit = self.cache.get(q.key(epoch), count=False)
+        # a twin query may have populated the cache since submission — that
+        # is this query's disposition: a cache hit, counted here and only
+        # here (its submit counted nothing)
+        live: list[tuple[PPRQuery, float, object]] = []
+        for q, t0, tr in group:
+            hit = self.cache.lookup(q.key(epoch))
             if hit is not None:
-                self.stats["cache_hits"] += 1
+                self.cache.count_hit()
+                m.served.labels(graph=q.graph,
+                                disposition="cache_hit").inc()
+                now = time.perf_counter()
+                tr.end("queue")
+                m.latency.labels(graph=q.graph,
+                                 disposition="cache_hit").observe(now - t0)
+                m.tracer.finish(tr)
                 out.append(self._materialize(q, epoch, *hit, cached=True))
             else:
-                live.append(q)
+                live.append((q, t0, tr))
         if not live:
             for r in out:
                 self._results[r.qid] = r
             return out
 
-        sched, coeffs = self.registry.schedule(live[0].c, live[0].tol)
-        n = rg.n
-        b_pad = self._bucket(len(live))
-        self.stats["padded_columns"] += b_pad - len(live)
-        p = np.zeros((n, b_pad), np.float32)
-        for j, q in enumerate(live):
-            p[np.asarray(q.seeds, np.int64), j] = 1.0  # canonical at birth
-        p[:, len(live):] = 1.0  # pad columns: uniform mass, discarded
+        # ---- batch formation: identical in-flight queries share a column
+        t_stage = time.perf_counter()
+        for q, t0, tr in live:
+            queued = tr.end("queue")
+            m.stage.labels(stage="queue").observe(
+                queued if queued else t_stage - t0)
+            tr.begin("batch_form")
+        cols: dict[tuple, int] = {}     # cache key -> column index
+        col_of: list[int] = []          # per live query
+        reps: list[PPRQuery] = []       # representative query per column
+        for q, _, _ in live:
+            key = q.key(epoch)
+            j = cols.get(key)
+            if j is None:
+                j = len(reps)
+                cols[key] = j
+                reps.append(q)
+            col_of.append(j)
 
+        sched, coeffs = self.registry.schedule(live[0][0].c, live[0][0].tol)
+        n = rg.n
+        b_pad = self._bucket(len(reps))
+        m.padded.inc(b_pad - len(reps))
+        p = np.zeros((n, b_pad), np.float32)
+        for j, q in enumerate(reps):
+            p[np.asarray(q.seeds, np.int64), j] = 1.0  # canonical at birth
+        p[:, len(reps):] = 1.0  # pad columns: uniform mass, discarded
+        for _, _, tr in live:
+            tr.end("batch_form")
+        m.stage.labels(stage="batch_form").observe(
+            time.perf_counter() - t_stage)
+
+        # ---- dispatch (host): trace/compile + enqueue on the device stream
         k = min(self.max_top_k, n)
+        mode = "adaptive" if self.adaptive else "fixed"
+        t_stage = time.perf_counter()
+        for _, _, tr in live:
+            tr.begin("solve_dispatch")
+        col_rounds = resid = None
         if self.adaptive:
-            plan = self.registry.adaptive_schedule(live[0].c, live[0].tol,
+            plan = self.registry.adaptive_schedule(live[0][0].c,
+                                                   live[0][0].tol,
                                                    chunk=self.adaptive_chunk)
-            idx, scores, used = _solve_topk_adaptive(
+            idx, scores, used, col_rounds, resid = _solve_topk_adaptive(
                 rg.engine, jnp.asarray(p), plan.c, plan.tol,
                 max_rounds=plan.max_rounds, chunk=plan.chunk, k=k)
-            self.stats["rounds_used"] += int(used)
         else:
             idx, scores = _solve_topk(rg.engine, coeffs, jnp.asarray(p),
                                       rounds=sched.rounds, k=k)
-            self.stats["rounds_used"] += sched.rounds
-        self.stats["rounds_bound"] += sched.rounds
+        for _, _, tr in live:
+            tr.end("solve_dispatch")
+        m.stage.labels(stage="solve_dispatch").observe(
+            time.perf_counter() - t_stage)
+
+        # ---- device: the only fence — JAX dispatch is async, so device
+        # execution time is exactly what block_until_ready waits out here
+        t_stage = time.perf_counter()
+        for _, _, tr in live:
+            tr.begin("solve_device", kind="device")
+        jax.block_until_ready(scores)
+        for _, _, tr in live:
+            tr.end("solve_device")
+        m.stage.labels(stage="solve_device").observe(
+            time.perf_counter() - t_stage)
+
+        rounds_used = int(used) if self.adaptive else sched.rounds
+        engine_name = type(rg.engine).__name__
+        m.solves.labels(graph=graph, engine=engine_name, bucket=b_pad,
+                        mode=mode).inc()
+        m.rounds_used.labels(graph=graph, mode=mode).inc(rounds_used)
+        m.rounds_bound.labels(graph=graph, mode=mode).inc(sched.rounds)
+
+        # ---- materialize: host copies, cache fills, per-query results
+        t_stage = time.perf_counter()
+        for _, _, tr in live:
+            tr.begin("materialize")
         idx = np.asarray(idx)
         scores = np.asarray(scores)
-        self.stats["solves"] += 1
-        self.stats["solved_queries"] += len(live)
-
-        for j, q in enumerate(live):
-            self.cache.put(q.key(epoch), (idx[j], scores[j]))
+        for key, j in cols.items():
+            self.cache.put(key, (idx[j], scores[j]))
+        for i, (q, t0, tr) in enumerate(live):
+            # disposition: served by this solve (twins included — each
+            # query counts itself, the COLUMNS were deduplicated)
+            self.cache.count_miss()
+            m.served.labels(graph=q.graph, disposition="solved").inc()
+            j = col_of[i]
             out.append(self._materialize(q, epoch, idx[j], scores[j],
-                                         cached=False, batch_size=len(live)))
+                                         cached=False,
+                                         batch_size=len(reps)))
+            tr.end("materialize")
+            m.latency.labels(graph=q.graph, disposition="solved").observe(
+                time.perf_counter() - t0)
+            m.tracer.finish(tr)
+        m.stage.labels(stage="materialize").observe(
+            time.perf_counter() - t_stage)
+
+        # ---- convergence telemetry: the paper's bound, checked per tick
+        if self.adaptive:
+            r_live = np.asarray(resid)[:len(reps)]
+            residual = float(r_live.max()) if r_live.size else 0.0
+            converged = float(np.mean(r_live <= plan.tol)) if r_live.size \
+                else 1.0
+        else:
+            residual = 0.0      # fixed path: no residual is measured
+            converged = 1.0     # by construction of the a-priori bound
+        m.convergence.record_tick(TickTelemetry(
+            tick=self._tick_no, graph=graph, engine=engine_name,
+            bucket=b_pad, columns=len(reps), rounds_used=rounds_used,
+            rounds_bound=sched.rounds, residual=residual,
+            converged_frac=converged, tol=float(live[0][0].tol),
+            c=float(live[0][0].c)))
+
         for r in out:
             self._results[r.qid] = r
         return out
@@ -414,16 +672,54 @@ class PageRankService:
     def pending(self) -> int:
         return len(self._pending)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> dict[int, PPRResult]:
+    def _drop_pending(self, max_ticks: int) -> None:
+        """Overrun policy "drop": discard the undrained queue, counting and
+        warning instead of raising. Dropped queries get no result."""
+        m = self.metrics
+        n_drop = len(self._pending)
+        now = time.perf_counter()
+        while self._pending:
+            q, t0, tr = self._pending.popleft()
+            m.served.labels(graph=q.graph, disposition="dropped").inc()
+            m.latency.labels(graph=q.graph, disposition="dropped").observe(
+                now - t0)
+            tr.end("queue")
+            tr.mark("dropped")
+            m.tracer.finish(tr)
+        m.queue_depth.set(0)
+        warnings.warn(
+            f"PPR serve loop dropped {n_drop} undrained queries after "
+            f"{max_ticks} ticks (see serve_served_total"
+            '{disposition="dropped"})', RuntimeWarning, stacklevel=3)
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          on_overrun: str = "raise") -> dict[int, PPRResult]:
         """Tick until the queue is empty; returns (and clears) the delivery
         buffer of results completed since the last drain — including cache
         hits resolved at submit() time — so a long-running service does not
-        accumulate every result it ever produced."""
+        accumulate every result it ever produced.
+
+        If the queue is still non-empty after `max_ticks` ticks (queries
+        arriving faster than ticks drain, or a stuck group), the loop never
+        finishes silently: on_overrun="raise" (default) raises RuntimeError;
+        "drop" discards the remainder, counts each under the
+        `dropped_queries` disposition, and warns. A drain that finishes in
+        exactly `max_ticks` ticks is NOT an overrun.
+        """
+        if on_overrun not in ("raise", "drop"):
+            raise ValueError(f"on_overrun {on_overrun!r} not in "
+                             "('raise', 'drop')")
+        ticks = 0
         while self._pending:
+            if ticks >= max_ticks:
+                if on_overrun == "raise":
+                    raise RuntimeError(
+                        f"PPR serve loop did not drain: {len(self._pending)}"
+                        f" queries still queued after {max_ticks} ticks")
+                self._drop_pending(max_ticks)
+                break
             self.tick()
-            max_ticks -= 1
-            if max_ticks <= 0:
-                raise RuntimeError("PPR serve loop did not drain")
+            ticks += 1
         if self.refresh_batch > 0:
             self.refresh_tick()   # idle work: near-boundary cache refreshes
         out, self._results = self._results, {}
@@ -432,7 +728,7 @@ class PageRankService:
     def query(self, graph: str, seeds, c: float = 0.85, tol: float = 1e-4,
               top_k: int = 8, qid: int | None = None) -> PPRResult:
         """Synchronous convenience wrapper: submit one query and drain it."""
-        qid = qid if qid is not None else -1 - self.stats["queries"]
+        qid = qid if qid is not None else -1 - self._submitted
         res = self.submit(PPRQuery(qid=qid, graph=graph,
                                    seeds=tuple(int(s) for s in seeds),
                                    c=c, tol=tol, top_k=top_k))

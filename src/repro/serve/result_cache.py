@@ -48,9 +48,10 @@ class ResultCache:
         return len(self._d)
 
     def get(self, key, count: bool = True):
-        """Lookup with LRU touch. count=False skips the hit/miss counters —
-        used by the batcher's in-flight dedup re-check so each query moves
-        the stats exactly once (at submit time)."""
+        """Lookup with LRU touch; count=False skips the hit/miss counters.
+        Direct callers use this; the serving layer uses `lookup` +
+        `count_hit`/`count_miss` instead so each QUERY moves the counters
+        exactly once, at disposition time."""
         if key in self._d:
             self._d.move_to_end(key)
             if count:
@@ -59,6 +60,28 @@ class ResultCache:
         if count:
             self.misses += 1
         return None
+
+    def lookup(self, key):
+        """LRU-touching lookup that never moves the hit/miss counters.
+
+        A served query's lookup history is not its disposition: a query can
+        miss at submit and then hit at tick time (an identical in-flight
+        twin filled the cache in between). The service therefore probes
+        with `lookup` and settles the books once per query with `count_hit`
+        (answered from cache, wherever that happened) or `count_miss`
+        (answered by a solve) — so `hits + misses` equals queries answered,
+        not probes made.
+        """
+        if key in self._d:
+            self._d.move_to_end(key)
+            return self._d[key]
+        return None
+
+    def count_hit(self, n: int = 1) -> None:
+        self.hits += n
+
+    def count_miss(self, n: int = 1) -> None:
+        self.misses += n
 
     def _index_discard(self, key) -> None:
         live = self._by_graph.get(key[0])

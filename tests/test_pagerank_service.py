@@ -188,7 +188,7 @@ class TestZeroColumnGuard:
         assert np.all(np.isfinite(np.asarray(scores)))
         np.testing.assert_array_equal(np.asarray(scores)[1], 0.0)
         plan = svc.registry.adaptive_schedule(0.85, 1e-4)
-        idx_a, scores_a, used = _solve_topk_adaptive(
+        idx_a, scores_a, used, _, _ = _solve_topk_adaptive(
             rg.engine, jnp.asarray(p), plan.c, plan.tol,
             max_rounds=plan.max_rounds, chunk=plan.chunk, k=4)
         assert np.all(np.isfinite(np.asarray(scores_a)))
