@@ -1,14 +1,15 @@
 """Benchmark regression gate for CI.
 
-Compares the fresh `engine_compare`, `adaptive_compare`, `update_churn`
-AND `serve_pagerank` records of a `benchmarks.run --json` output against
-the committed baseline (BENCH_pagerank.json) and fails when any entry —
-keyed (family, B, engine) for engine_compare, (family, B, "engine/mode")
-for adaptive_compare, (family, batch_edges, "update/mode") for update_churn
-(per-batch update latency, so update-path regressions gate like solve
-regressions), and (family, B, "serve/mean" | "serve/p99") for the serving
-section (the p99 key gates TAIL latency, which a mean can hide) — slowed
-down by more than --threshold.
+Compares the fresh `engine_compare`, `adaptive_compare`, `update_churn`,
+`scale_compare` AND `serve_pagerank` records of a `benchmarks.run --json`
+output against the committed baseline (BENCH_pagerank.json) and fails when
+any entry — keyed (family, B, engine) for engine_compare, (family, B,
+"engine/mode") for adaptive_compare, (family, batch_edges, "update/mode")
+for update_churn (per-batch update latency, so update-path regressions gate
+like solve regressions), (family, B, "scale-engine/weight_dtype") for the
+paper-scale per-iteration times, and (family, B, "serve/mean" |
+"serve/p99") for the serving section (the p99 key gates TAIL latency,
+which a mean can hide) — slowed down by more than --threshold.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -52,6 +53,14 @@ def _load_entries(path: str) -> dict[tuple, float]:
         # per-batch update latency; B is the batch's edge count here
         out[(rec["family"], rec["B"],
              f"update-{rec['engine']}/{rec['mode']}")] = rec["us_per_update"]
+    for rec in payload.get("scale_compare", []):
+        if rec.get("us_per_iter") is None:
+            continue   # probed-and-skipped formats (block-ELL at scale)
+        # paper-scale per-iteration times; "scale-" prefixed so the keys
+        # stay disjoint and pick up their own jitter floor
+        out[(rec["family"], rec["B"],
+             f"scale-{rec['engine']}/{rec['weight_dtype']}")] = \
+            rec["us_per_iter"]
     for rec in payload.get("serve_pagerank", []):
         if rec.get("family") != "serve_pagerank":
             continue   # the serve_overhead record is informational only

@@ -33,8 +33,8 @@ def main(argv=None) -> None:
 
     import jax
     from benchmarks import (adaptive_bench, engine_bench, kernels_bench,
-                            paper_tables, serve_pagerank_bench, sharded_bench,
-                            update_churn_bench)
+                            paper_tables, scale_bench, serve_pagerank_bench,
+                            sharded_bench, update_churn_bench)
 
     sections: dict[str, list] = {}
     _emit(sections, "theory_check (paper §4.2 claims)",
@@ -63,6 +63,13 @@ def main(argv=None) -> None:
     # retention under selective invalidation — gated like solve regressions
     uc_rows, uc_records = update_churn_bench.update_churn(quick=quick)
     _emit(sections, "update_churn_incremental_vs_rebuild", uc_rows)
+
+    # paper-scale engines: hub-tail vs COO vs (probed) block-ELL at
+    # n = 10^5 / 10^6 on the scale-free family, f32 and packed bf16 weights
+    # — runs in BOTH modes (the n=10^6 hub-tail speedup is the headline the
+    # regression gate tracks); graphs come through the dataset cache
+    sc_rows, sc_records = scale_bench.scale_compare(quick=quick)
+    _emit(sections, "scale_compare_paper_scale_engines", sc_rows)
 
     # serving: qps + histogram-derived p50/p99/p999 per-query latency and
     # the metrics-on/off overhead check — runs in BOTH modes so the p99
@@ -99,6 +106,7 @@ def main(argv=None) -> None:
             "adaptive_compare": ad_records,
             "sharded_compare": sh_records,
             "update_churn": uc_records,
+            "scale_compare": sc_records,
             "serve_pagerank": sv_records,
             "sections": sections,
         }

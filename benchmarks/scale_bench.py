@@ -1,0 +1,207 @@
+"""scale_compare: engines head-to-head at paper-scale graph sizes.
+
+The engine_compare sweep runs at n <= ~20k so the whole matrix fits a
+shared CI minute; it cannot see the effects this PR exists for — the
+hub/tail degree split, packed bf16 weights, device-residency cost. This
+section measures them where they show: Chung-Lu scale-free graphs at
+n = 10^5 and 10^6 (m ~ 1.3 * 10^7 directed edges at the 10^6 point, the
+paper's dataset class), through the cached dataset layer so repeat runs
+(and CI, via actions/cache on the preprocessed npz) skip generation.
+
+Per (family, engine, weight_dtype) it records:
+
+  us_per_iter    — one P x application, min over interleaved reps (B=1;
+                   the serve path's unit of work)
+  build_s        — host-side build + device transfer, engine ready to
+                   apply (amortized per epoch, paid in full per update on
+                   the hub-tail path)
+  device_bytes   — exact device residency of the engine's pytree leaves
+  l1_vs_coo_f32  — L1 distance of the normalized 12-round CPAA PageRank
+                   against the coo/float32 reference on the same graph
+                   (the parity gate: <= 1e-5 f32, <= 1e-3 bf16)
+
+block-ELL is probed, not assumed: a scattered power-law graph at scale
+would need a [n_rb, S, B, B] values tensor in the tens of GB, so the probe
+estimates the tensor size from the tile census (the same np.unique count
+`block_fill_rate` does, minus the BFS) and records a skip with the
+estimated bytes instead of dying in an allocation. That skip line IS the
+measurement: it documents why the uniform-tile format is not a contender
+on this graph class.
+
+check_regression.py keys these records as
+(family, B, "scale-<engine>/<weight_dtype>") -> us_per_iter.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_schedule
+from repro.core.engine import CooEngine, HubTailEngine
+from repro.core.pagerank import cpaa_fixed
+from repro.graph.datasets import scale_dataset
+from repro.graph.ops import device_graph
+
+ROUNDS = 12
+
+# block-ELL tile-values budget: past this the format is recorded as skipped
+# (the estimate is exact on S and n_rb; 512 MB is already generous next to
+# the ~150 MB the COO arrays cost at the 10^6 point)
+BLOCK_ELL_BYTE_BUDGET = 512 * 1024 * 1024
+BLOCK = 128
+
+
+def _device_bytes(eng) -> int:
+    """Exact device residency: sum of the engine pytree's array leaves."""
+    return int(sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(eng)
+                   if hasattr(leaf, "nbytes")))
+
+
+def _block_ell_probe(g, block: int = BLOCK) -> tuple[int, float]:
+    """(estimated values-tensor bytes, fill rate) of a BxB tiling in natural
+    vertex order — the tile census without the BFS or the values tensor.
+    Natural order only under-counts vs a BFS reorder by a bounded factor;
+    for the skip decision the order of magnitude is what matters."""
+    n_rb = (g.n + block - 1) // block
+    tiles = np.unique((g.dst.astype(np.int64) // block) * n_rb
+                      + (g.src.astype(np.int64) // block))
+    u_rb = tiles // n_rb
+    s_max = int(np.bincount(u_rb, minlength=n_rb).max()) if tiles.size else 1
+    est_bytes = n_rb * s_max * block * block * 4
+    fill = g.m / max(tiles.size * block * block, 1)
+    return est_bytes, fill
+
+
+def _builders(g):
+    """(engine_key, weight_dtype_name, build_fn) for one graph."""
+    return [
+        ("coo", "float32",
+         lambda: CooEngine(device_graph(g, jnp.float32))),
+        ("coo", "bfloat16",
+         lambda: CooEngine(device_graph(g, jnp.float32,
+                                        weight_dtype=jnp.bfloat16))),
+        ("hub_tail", "float32",
+         lambda: HubTailEngine.from_graph(g, dtype=jnp.float32)),
+        ("hub_tail", "bfloat16",
+         lambda: HubTailEngine.from_graph(g, dtype=jnp.float32,
+                                          weight_dtype=jnp.bfloat16)),
+    ]
+
+
+def scale_compare(quick: bool = False, families=None, cache_dir=None):
+    """Returns (csv_rows, json_records). Quick mode keeps both scale points
+    (the n=10^6 record is the acceptance headline) and trims the timing
+    reps; `families` overrides the family list (the CI scale-smoke job
+    passes a single mid-size one)."""
+    reps = 3 if quick else 5
+    if families is None:
+        families = ("chunglu-100k", "chunglu-1m")
+    sched = make_schedule(0.85, rounds=ROUNDS)
+    coeffs = jnp.asarray(sched.coeffs, jnp.float32)
+
+    rows = [("family", "n", "m", "B", "engine", "weight_dtype", "us_per_iter",
+             "build_s", "device_mb", "speedup_vs_coo", "bytes_vs_coo_f32",
+             "l1_vs_coo_f32", "note")]
+    records = []
+    for fam in families:
+        g = scale_dataset(fam, cache_dir=cache_dir)
+        p = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+        x = jnp.asarray(
+            np.random.default_rng(0).random(g.n, np.float32))
+
+        entries = []   # (engine_key, wdtype_name, eng, build_s)
+        for key, wname, build in _builders(g):
+            t0 = time.perf_counter()
+            eng = build()
+            jax.block_until_ready(jax.tree_util.tree_leaves(eng))
+            entries.append((key, wname, eng, time.perf_counter() - t0))
+
+        # one jitted apply per entry; interleaved min-over-reps so machine-
+        # load windows hit every engine alike (same policy as engine_bench)
+        applies = [jax.jit(eng.apply) for _, _, eng, _ in entries]
+        for ap in applies:
+            jax.block_until_ready(ap(x))
+        best = [float("inf")] * len(entries)
+        for _ in range(reps):
+            for i, ap in enumerate(applies):
+                t0 = time.perf_counter()
+                jax.block_until_ready(ap(x))
+                best[i] = min(best[i], time.perf_counter() - t0)
+
+        # parity: normalized 12-round CPAA against coo/f32 on this graph
+        pis = []
+        for _, _, eng, _ in entries:
+            pi, _ = cpaa_fixed(eng, coeffs, p, rounds=ROUNDS)
+            pis.append(pi)
+        pi_ref = pis[0]
+        l1s = [float(jnp.abs(pi - pi_ref).sum()) for pi in pis]
+
+        coo_f32_iter = best[0]
+        coo_f32_bytes = _device_bytes(entries[0][2])
+        for (key, wname, eng, build_s), dt, l1 in zip(entries, best, l1s):
+            dev_bytes = _device_bytes(eng)
+            rec = {"family": fam, "n": g.n, "m": g.m, "B": 1,
+                   "engine": key, "weight_dtype": wname, "rounds": ROUNDS,
+                   "us_per_iter": round(dt * 1e6, 1),
+                   "build_s": round(build_s, 3),
+                   "device_bytes": dev_bytes,
+                   "speedup_vs_coo": round(coo_f32_iter / dt, 3),
+                   "bytes_ratio_vs_coo_f32":
+                       round(coo_f32_bytes / max(dev_bytes, 1), 3),
+                   "l1_vs_coo_f32": float(f"{l1:.3e}"),
+                   "skipped": None}
+            records.append(rec)
+            rows.append((fam, g.n, g.m, 1, key, wname, rec["us_per_iter"],
+                         rec["build_s"], round(dev_bytes / 1e6, 1),
+                         rec["speedup_vs_coo"],
+                         rec["bytes_ratio_vs_coo_f32"],
+                         f"{l1:.1e}", ""))
+
+        # block-ELL: probe the tile-values footprint, skip over the budget
+        est_bytes, fill = _block_ell_probe(g)
+        if est_bytes > BLOCK_ELL_BYTE_BUDGET:
+            note = (f"values tensor ~{est_bytes / 1e9:.1f} GB at "
+                    f"B={BLOCK} (fill {fill:.1e}) > budget")
+            records.append({"family": fam, "n": g.n, "m": g.m, "B": 1,
+                            "engine": "block_ell", "weight_dtype": "float32",
+                            "rounds": ROUNDS, "us_per_iter": None,
+                            "build_s": None, "device_bytes": est_bytes,
+                            "speedup_vs_coo": None,
+                            "bytes_ratio_vs_coo_f32": None,
+                            "l1_vs_coo_f32": None, "skipped": note})
+            rows.append((fam, g.n, g.m, 1, "block_ell", "float32", "", "",
+                         round(est_bytes / 1e6, 1), "", "", "", note))
+        else:
+            from repro.core.engine import BlockEllEngine
+            t0 = time.perf_counter()
+            eng = BlockEllEngine.from_graph(g, block=BLOCK, use_kernel=False)
+            jax.block_until_ready(jax.tree_util.tree_leaves(eng))
+            build_s = time.perf_counter() - t0
+            ap = jax.jit(lambda xi: eng.from_internal(
+                eng.apply(eng.to_internal(xi))))
+            jax.block_until_ready(ap(x))
+            dt = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(ap(x))
+                dt = min(dt, time.perf_counter() - t0)
+            pi, _ = cpaa_fixed(eng, coeffs, p, rounds=ROUNDS)
+            l1 = float(jnp.abs(pi - pi_ref).sum())
+            dev_bytes = _device_bytes(eng)
+            rec = {"family": fam, "n": g.n, "m": g.m, "B": 1,
+                   "engine": "block_ell", "weight_dtype": "float32",
+                   "rounds": ROUNDS, "us_per_iter": round(dt * 1e6, 1),
+                   "build_s": round(build_s, 3), "device_bytes": dev_bytes,
+                   "speedup_vs_coo": round(coo_f32_iter / dt, 3),
+                   "bytes_ratio_vs_coo_f32":
+                       round(coo_f32_bytes / max(dev_bytes, 1), 3),
+                   "l1_vs_coo_f32": float(f"{l1:.3e}"), "skipped": None}
+            records.append(rec)
+            rows.append((fam, g.n, g.m, 1, "block_ell", "float32",
+                         rec["us_per_iter"], rec["build_s"],
+                         round(dev_bytes / 1e6, 1), rec["speedup_vs_coo"],
+                         rec["bytes_ratio_vs_coo_f32"], f"{l1:.1e}", ""))
+    return rows, records

@@ -28,10 +28,16 @@ class PPRServeConfig:
     max_batch: int = 32
     cache_capacity: int = 4096
     max_top_k: int = 16
-    # solve-engine format: "auto" (device-count + fill-rate heuristic),
-    # "coo", "block_ell", "fused", "sharded-1d" or "sharded-2d" — see
-    # core/engine.select_engine and docs/performance.md
+    # solve-engine format: "auto" (device-count + degree-skew + fill-rate
+    # heuristic), "coo", "hub-tail", "block_ell", "fused", "sharded-1d" or
+    # "sharded-2d" — see core/engine.select_engine and docs/performance.md
     engine: str = "auto"
+    # packed storage dtype for edge weights / inv_deg ("bfloat16" halves
+    # them; accumulation stays f32). None = solve dtype. Parity bound:
+    # L1 <= ~1e-3 on normalized PageRank (the one 1/deg rounding).
+    weight_dtype: str | None = None
+    # host->device transfer chunk (edges) at registration; None = one shot
+    ingest_chunk_edges: int | None = None
     # sharded-engine mesh shape: (R, C) grid for sharded-2d (None = most-
     # square factorization of the device count) and the partition padding
     # lane (vertex chunks are padded to multiples of devices * lane)
@@ -86,7 +92,10 @@ def make_service(cfg: PPRServeConfig):
     reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch,
                         grid=cfg.mesh_grid,
                         partition_lane=cfg.partition_lane,
-                        update_mode=cfg.update_mode)
+                        update_mode=cfg.update_mode,
+                        weight_dtype=None if cfg.weight_dtype is None
+                        else jnp.dtype(cfg.weight_dtype),
+                        ingest_chunk_edges=cfg.ingest_chunk_edges)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
     svc = PageRankService(reg, max_batch=cfg.max_batch,

@@ -8,6 +8,15 @@ not an algorithm choice, so it lives behind an `Engine`:
                          1/deg[src] weights folded into a precomputed per-edge
                          array (no per-iteration inv_deg gather). The
                          universal fallback: works for any graph, any batch.
+  * HubTailEngine      — degree-split layout for power-law graphs at scale:
+                         vertices above a degree threshold (the hubs, which
+                         on a scale-free graph receive the majority of all
+                         edges) get dense fixed-width column panels reduced
+                         by contiguous gather + row-sum, while the low-degree
+                         tail stays on the COO/segment path. P is applied in
+                         factored form (xd = x * inv_deg once per round), so
+                         no per-edge weights are stored at all: ~4 bytes/edge
+                         on the hub side vs COO's 12.
   * BlockEllEngine     — the block-ELL Pallas SpMM (`kernels/bsr_spmm`):
                          vertices BFS-reordered so edges cluster into BxB
                          tiles, each tile a dense matmul on the MXU. The
@@ -84,6 +93,7 @@ from repro.kernels.cheb_step.ops import cheb_step
 
 __all__ = [
     "CooEngine",
+    "HubTailEngine",
     "BlockEllEngine",
     "FusedBlockEllEngine",
     "ShardedEngine",
@@ -97,7 +107,7 @@ __all__ = [
     "reset_apply_counts",
 ]
 
-ENGINE_MODES = ("auto", "coo", "block_ell", "fused", "sharded_1d",
+ENGINE_MODES = ("auto", "coo", "hub_tail", "block_ell", "fused", "sharded_1d",
                 "sharded_2d")
 
 # Per-engine-class apply() invocation counts. apply() runs at TRACE time
@@ -177,6 +187,177 @@ class CooEngine:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class HubTailEngine:
+    """Degree-split SpMM engine for skewed (power-law) graphs at scale.
+
+    On a scale-free graph the hubs — the top few percent of vertices by
+    degree — receive the majority of all edges, and segment_sum (a serial
+    scatter-add on the CPU backend) pays per-edge for every one of them.
+    The split sends each edge down the path its DESTINATION's degree earns:
+
+      * hub rows (deg >= hub_min_deg, degree-sorted descending) are packed
+        into fixed-width int32 column panels `panel_cols` [P, W]; a round
+        gathers the panel columns contiguously, row-sums in the solve dtype,
+        and reduces the per-panel partials with one tiny segment_sum over
+        [P] -> [H] (P ~ hub_edges / W);
+      * tail rows keep the proven gather + segment_sum over the remaining
+        COO edges.
+
+    P = A D^{-1} is applied in FACTORED form: xd = x * inv_deg is computed
+    once per round (O(n)), so neither path stores per-edge weights — the
+    hub side costs ~4 bytes/edge (one int32 column id) and the tail 8,
+    against COO's 12 (f32 weights) or 10 (bf16). Panel padding slots hold
+    the sentinel column id n, which indexes a zero row appended to xd
+    inside `apply` — padding contributes exactly 0.0, preserving the mass
+    invariant, and the internal layout itself is the identity (original
+    vertex order, no padding rows).
+
+    `weight_dtype` packs inv_deg (bf16 halves it; upcast to the solve dtype
+    before the multiply, so accumulation stays full precision).
+    """
+
+    name = "hub_tail"
+    DEFAULT_MIN_DEG = 32    # hub bar: deg >= 32 captures ~2/3 of the edges
+    DEFAULT_PANEL_WIDTH = 32  # columns per panel: pad waste vs reduce count
+
+    def __init__(self, inv_deg: jax.Array, tail_src: jax.Array,
+                 tail_dst: jax.Array, panel_cols: jax.Array,
+                 panel_hub: jax.Array, hub_ids: jax.Array, n_orig: int,
+                 hub_min_deg: int, panel_width: int, acc_dtype=jnp.float32):
+        self.inv_deg = inv_deg         # [n] weight_dtype (packed ok)
+        self.tail_src = tail_src       # [m_tail] int32
+        self.tail_dst = tail_dst       # [m_tail] int32
+        self.panel_cols = panel_cols   # [P, W] int32, sentinel n = padding
+        self.panel_hub = panel_hub     # [P] int32 hub rank of each panel
+        self.hub_ids = hub_ids         # [H] int32 vertex id per hub rank
+        self.n_orig = n_orig
+        self.hub_min_deg = hub_min_deg
+        self.panel_width = panel_width
+        self.acc_dtype = jnp.dtype(acc_dtype)
+
+    @classmethod
+    def from_graph(cls, g: Graph, hub_min_deg: int | None = None,
+                   panel_width: int | None = None, dtype=jnp.float32,
+                   weight_dtype=None) -> "HubTailEngine":
+        """Host-side build: degree-sort the hubs, lexsort their edges by
+        (hub rank, src) for gather locality, pack into W-wide panels.
+        All vectorized numpy — O(m log m)."""
+        from repro.graph.ops import check_int32_range
+        check_int32_range(g.n, g.m, what="HubTailEngine")
+        thr = cls.DEFAULT_MIN_DEG if hub_min_deg is None else int(hub_min_deg)
+        width = cls.DEFAULT_PANEL_WIDTH if panel_width is None \
+            else int(panel_width)
+        wdtype = jnp.dtype(dtype) if weight_dtype is None \
+            else jnp.dtype(weight_dtype)
+        n = g.n
+        src = np.asarray(g.src)
+        dst = np.asarray(g.dst)
+        deg = np.bincount(src, minlength=n)
+        inv_deg = 1.0 / np.maximum(deg, 1)
+
+        hub_mask_v = deg >= thr
+        hub_ids = np.flatnonzero(hub_mask_v)
+        hub_ids = hub_ids[np.argsort(-deg[hub_ids],
+                                     kind="stable")].astype(np.int32)
+        H = int(hub_ids.size)
+        hub_rank = np.full(n, -1, np.int64)
+        hub_rank[hub_ids] = np.arange(H)
+        is_hub = hub_mask_v[dst]
+        hsrc = src[is_hub]
+        hr = hub_rank[dst[is_hub]]
+        tail_src = np.ascontiguousarray(src[~is_hub])
+        tail_dst = np.ascontiguousarray(dst[~is_hub])
+        order = np.lexsort((hsrc, hr))
+        hsrc, hr = hsrc[order], hr[order]
+        hdeg = np.bincount(hr, minlength=H)
+        panels_per_hub = np.maximum((hdeg + width - 1) // width, 1)
+        n_panels = int(panels_per_hub.sum())
+        cols = np.full((n_panels, width), n, np.int32)  # n -> zero sentinel
+        panel_hub = np.repeat(np.arange(H, dtype=np.int32), panels_per_hub)
+        panel_base = np.concatenate([[0], np.cumsum(panels_per_hub)[:-1]])
+        starts = np.concatenate([[0], np.cumsum(hdeg)[:-1]])
+        pos = panel_base[hr] * width + (np.arange(hsrc.size) - starts[hr])
+        cols.ravel()[pos] = hsrc
+        return cls(inv_deg=jnp.asarray(inv_deg, wdtype),
+                   tail_src=jnp.asarray(tail_src),
+                   tail_dst=jnp.asarray(tail_dst),
+                   panel_cols=jnp.asarray(cols),
+                   panel_hub=jnp.asarray(panel_hub),
+                   hub_ids=jnp.asarray(hub_ids),
+                   n_orig=n, hub_min_deg=thr, panel_width=width,
+                   acc_dtype=dtype)
+
+    @property
+    def n(self) -> int:
+        return self.n_orig
+
+    @property
+    def n_hubs(self) -> int:
+        return self.hub_ids.shape[0]
+
+    @property
+    def dtype(self):
+        # the SOLVE dtype, not the packed weight storage dtype: solvers
+        # build their p / carry vectors from this, and those must stay at
+        # accumulation precision even when inv_deg is bf16
+        return self.acc_dtype
+
+    @property
+    def weight_dtype(self):
+        return self.inv_deg.dtype
+
+    def to_internal(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def from_internal(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        _count_apply(self.name)
+        inv = self.inv_deg
+        if inv.dtype != x.dtype:
+            inv = inv.astype(x.dtype)   # packed storage -> full-precision mul
+        xd = x * (inv if x.ndim == 1 else inv[:, None])
+        # sentinel row n: panel padding gathers exactly 0.0
+        zero = jnp.zeros((1,) + x.shape[1:], xd.dtype)
+        xd = jnp.concatenate([xd, zero])
+        y = jax.ops.segment_sum(xd[self.tail_src], self.tail_dst,
+                                num_segments=self.n_orig)
+        part = xd[self.panel_cols].sum(axis=1)
+        hub_y = jax.ops.segment_sum(part, self.panel_hub,
+                                    num_segments=self.n_hubs)
+        return y.at[self.hub_ids].add(hub_y)
+
+    def cheb_round(self, y, t, acc, ck):
+        return _default_cheb_round(y, t, acc, ck)
+
+    def refresh(self, g: Graph, delta=None, *, dg=None,
+                **kw) -> "HubTailEngine":
+        """Rebuild for the updated graph with the same split knobs. An edge
+        delta can move vertices across the hub threshold, so the honest
+        refresh is a full (vectorized, host-side) rebuild — no incremental
+        patch path; the registry's padded DeviceGraph, if any, is not
+        consulted."""
+        return type(self).from_graph(g, hub_min_deg=self.hub_min_deg,
+                                     panel_width=self.panel_width,
+                                     dtype=self.acc_dtype,
+                                     weight_dtype=self.inv_deg.dtype)
+
+    def tree_flatten(self):
+        children = (self.inv_deg, self.tail_src, self.tail_dst,
+                    self.panel_cols, self.panel_hub, self.hub_ids)
+        aux = (self.n_orig, self.hub_min_deg, self.panel_width,
+               str(self.acc_dtype))
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        n_orig, hub_min_deg, panel_width, acc_dtype = aux
+        return cls(*children, n_orig=n_orig, hub_min_deg=hub_min_deg,
+                   panel_width=panel_width, acc_dtype=jnp.dtype(acc_dtype))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -607,6 +788,22 @@ def _default_min_fill() -> float:
 # n vs n/R + n/C volume model the 4x multiplier for the 2D bar comes from).
 SHARDED_MIN_N = 1 << 16
 
+# auto mode considers the hub/tail split only past this size (below it COO's
+# segment_sum is already cheap and the split buys layout complexity for
+# nothing) and only when hubs at the default threshold receive at least this
+# fraction of all edges (degree-skew bar: power-law graphs clear it easily —
+# ~2/3 at the chung-lu operating point — while meshes/grids, whose max degree
+# sits under the threshold, score 0.0 and keep their fill-rate choice).
+HUB_TAIL_MIN_N = 1 << 17
+HUB_TAIL_MIN_EDGE_FRAC = 0.4
+
+
+def _hub_edge_fraction(g: Graph, thr: int) -> float:
+    """Fraction of directed edges whose destination has deg >= thr."""
+    deg = g.deg
+    m = max(int(g.m), 1)
+    return float(deg[deg >= thr].sum()) / m
+
 
 def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                   dg: DeviceGraph | None = None, dtype=jnp.float32,
@@ -614,17 +811,20 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                   use_kernel: bool | None = None, interpret: bool | None = None,
                   stable_shapes: bool = False, mesh: Mesh | None = None,
                   grid: tuple[int, int] | None = None, lane: int = 128,
-                  comm_dtype=None, sharded_min_n: int | None = None):
+                  comm_dtype=None, sharded_min_n: int | None = None,
+                  weight_dtype=None):
     """Pick/build the solve engine for a graph (host-side, once per epoch).
 
-    mode: "coo" | "block_ell" | "fused" | "sharded_1d" | "sharded_2d" force
-    a format (dashes accepted: "sharded-1d"); "auto" first checks the device
-    axis — with >= 2 devices and g.n >= `sharded_min_n` it shards (a 2D grid
-    when >= 4 devices and the graph is big enough to amortize the two-phase
-    collectives, the paper-faithful 1D rows otherwise) — then falls back to
-    the single-device fill-rate choice: block-ELL is kept only when its tile
-    fill-rate clears `min_fill` (dense-enough tiles to beat segment_sum),
-    otherwise COO.
+    mode: "coo" | "hub_tail" | "block_ell" | "fused" | "sharded_1d" |
+    "sharded_2d" force a format (dashes accepted: "hub-tail"); "auto" first
+    checks the device axis — with >= 2 devices and g.n >= `sharded_min_n` it
+    shards (a 2D grid when >= 4 devices and the graph is big enough to
+    amortize the two-phase collectives, the paper-faithful 1D rows
+    otherwise) — then, on a single device, large skewed graphs (n >=
+    HUB_TAIL_MIN_N and hubs receiving >= HUB_TAIL_MIN_EDGE_FRAC of the
+    edges) take the hub/tail split, and everything else falls to the
+    fill-rate choice: block-ELL when its tile fill-rate clears `min_fill`
+    (dense-enough tiles to beat segment_sum), otherwise COO.
     batch: expected personalization width (auto mode nudges tiny batches on
     small graphs back to COO; the MXU win needs columns to amortize the
     tiling round-trip).
@@ -635,16 +835,27 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
     mesh / grid / lane / comm_dtype: sharded-engine knobs — an explicit mesh
     to run on (default: all devices), the (R, C) grid for sharded_2d, the
     partition padding lane, and an optional wire dtype for the all-gather.
+    weight_dtype: packed storage dtype for edge weights / inv_deg on the
+    COO and hub-tail paths (bf16 halves them; accumulation stays in
+    `dtype`). The tile/partition engines ignore it (f32 values).
     """
     mode = mode.replace("-", "_")
     if mode not in ENGINE_MODES:
         raise ValueError(f"engine mode {mode!r} not in {ENGINE_MODES}")
 
     def coo():
-        return CooEngine(dg if dg is not None else device_graph(g, dtype))
+        return CooEngine(dg if dg is not None
+                         else device_graph(g, dtype,
+                                           weight_dtype=weight_dtype))
+
+    def hub_tail():
+        return HubTailEngine.from_graph(g, dtype=dtype,
+                                        weight_dtype=weight_dtype)
 
     if mode == "coo":
         return coo()
+    if mode == "hub_tail":
+        return hub_tail()
     if mode in ("block_ell", "fused"):
         cls = BlockEllEngine if mode == "block_ell" else FusedBlockEllEngine
         return cls.from_graph(g, block=block, use_kernel=use_kernel,
@@ -671,6 +882,15 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                                               comm_dtype=comm_dtype)
         return Sharded1DEngine.from_graph(g, mesh=mesh, lane=lane,
                                           dtype=dtype, comm_dtype=comm_dtype)
+
+    # auto, single device, paper-scale skew: when the hubs carry most of the
+    # edge mass the degree split beats any uniform layout (and the fill-rate
+    # probe below — a host BFS + tile count — is exactly what we'd rather
+    # not run on a 10^7-edge scattered graph)
+    if g.n >= HUB_TAIL_MIN_N and \
+            _hub_edge_fraction(g, HubTailEngine.DEFAULT_MIN_DEG) >= \
+            HUB_TAIL_MIN_EDGE_FRAC:
+        return hub_tail()
 
     # auto: too small to tile -> COO without paying the host-side build
     if g.n < 2 * block or (batch is not None and batch < 8 and g.n < 8 * block):

@@ -50,7 +50,7 @@ from repro.graph.ops import DeviceGraph  # noqa: F401  (re-exported API surface)
 
 __all__ = ["PageRankResult", "cpaa", "cpaa_adaptive", "power", "forward_push",
            "monte_carlo", "cpaa_fixed", "cpaa_adaptive_fixed", "power_refine",
-           "true_pagerank_dense"]
+           "true_pagerank_dense", "degree_prior"]
 
 
 @dataclass
@@ -82,6 +82,21 @@ def _normalize(acc: jax.Array) -> jax.Array:
 def _uniform_p(eng) -> jax.Array:
     """Uniform UNIT-mass personalization (see the normalization contract)."""
     return jnp.full((eng.n,), 1.0 / eng.n, eng.dtype)
+
+
+def degree_prior(g) -> np.ndarray:
+    """deg / 2m — the stationary distribution of P on an undirected graph.
+
+    Because P = A D^{-1} with a symmetric A, x = deg/2m satisfies P x = x
+    exactly, so personalized PageRank seeded AT the prior returns the prior
+    for every damping factor: pi(c, p=deg/2m) = deg/2m in exact arithmetic
+    (Grolmusz's degree-plus-bounded-correction form with zero correction).
+    That makes it an analytic oracle at any scale — the scale tests compare
+    solver output against it where `true_pagerank_dense` (O(n^3)) is
+    unaffordable. Host-side float64 numpy; takes a `Graph`.
+    """
+    deg = np.asarray(g.deg, np.float64)
+    return deg / max(deg.sum(), 1.0)
 
 
 @partial(jax.jit, static_argnames=("rounds", "keep_history", "unroll"))

@@ -102,20 +102,40 @@ def kmer_chains(n: int, seed: int = 0) -> Graph:
 
 
 def powerlaw_ba(n: int, m_attach: int = 3, seed: int = 0) -> Graph:
-    """Barabasi-Albert preferential attachment (power-law degrees)."""
+    """Barabasi-Albert preferential attachment (power-law degrees).
+
+    Vectorized Batagelj-Brandes sampling: conceptually every attachment
+    edge appends both endpoints to a flat history array, and picking a
+    uniformly random SLOT of that history is exactly degree-proportional
+    sampling. All slot picks are drawn up front (each edge j picks in
+    [0, L0 + 2j), so only slots that exist when j is placed); a pick that
+    lands on a target slot (odd) chases that edge's own pick, and the
+    chains — strictly decreasing, geometrically short — are resolved by a
+    handful of masked gather passes instead of the old per-vertex python
+    loop. Duplicate picks and the rare self loop are normalized away by
+    `from_undirected_edges` (the old set-based dedup, same effect), so the
+    realized attachment count per vertex is <= m_attach, as before.
+    """
     rng = np.random.default_rng(seed)
-    us = []; vs = []
-    targets = list(range(m_attach))
-    repeated: list[int] = list(range(m_attach))
-    for v in range(m_attach, n):
-        # sample m_attach targets preferentially from the degree-weighted pool
-        picks = rng.choice(len(repeated), size=m_attach, replace=False)
-        chosen = {repeated[p] for p in picks}
-        for t in chosen:
-            us.append(v); vs.append(t)
-        repeated.extend(chosen)
-        repeated.extend([v] * len(chosen))
-    return Graph.from_undirected_edges(n, np.array(us), np.array(vs))
+    n_new = n - m_attach
+    if n_new <= 0:
+        return Graph.from_undirected_edges(n, np.empty(0, np.int64),
+                                           np.empty(0, np.int64))
+    m = n_new * m_attach
+    j = np.arange(m, dtype=np.int64)
+    src = m_attach + j // m_attach
+    # history layout: slots [0, L0) seed the initial m_attach vertices once;
+    # edge j then owns slots L0+2j (its source) and L0+2j+1 (its target)
+    L0 = m_attach
+    r = rng.integers(0, L0 + 2 * j)
+    p = r.copy()
+    while True:
+        odd = (p >= L0) & ((p - L0) & 1 == 1)
+        if not odd.any():
+            break
+        p[odd] = r[(p[odd] - L0 - 1) >> 1]
+    dst = np.where(p < L0, p, src[np.minimum((p - L0) >> 1, m - 1)])
+    return Graph.from_undirected_edges(n, src, dst)
 
 
 def erdos_renyi(n: int, avg_deg: float, seed: int = 0) -> Graph:

@@ -17,6 +17,7 @@ from repro.graph.structure import Graph
 __all__ = [
     "DeviceGraph",
     "device_graph",
+    "check_int32_range",
     "EdgeSlots",
     "SlotPatch",
     "patch_device_graph",
@@ -82,8 +83,55 @@ jax.tree_util.register_pytree_node(
     DeviceGraph, DeviceGraph.tree_flatten, DeviceGraph.tree_unflatten)
 
 
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def check_int32_range(n: int, nnz: int, what: str = "graph") -> None:
+    """Fail loudly where an index would silently wrap in the int32 edge
+    arrays. Every device-side index (vertex ids, slot ids, segment ids) is
+    int32; past 2^31-1 a build would produce negative indices and scatter
+    mass to garbage rows with no error."""
+    if n > _INT32_MAX:
+        raise ValueError(
+            f"{what}: n={n} exceeds int32 range ({_INT32_MAX}); "
+            "vertex ids are stored as int32 device arrays")
+    if nnz > _INT32_MAX:
+        raise ValueError(
+            f"{what}: nnz={nnz} exceeds int32 range ({_INT32_MAX}); "
+            "edge slot ids are stored as int32 device arrays")
+
+
+def _chunked_device_1d(arr: np.ndarray, dtype, chunk: int) -> jax.Array:
+    """Host->device transfer of a 1D array in bounded chunks: each chunk is
+    converted + transferred on its own, then concatenated ON DEVICE, so the
+    peak extra host allocation is O(chunk) instead of O(m) (the float64 ->
+    storage-dtype conversion is where a one-shot transfer doubles peak host
+    memory at 10^7+ edges)."""
+    if arr.shape[0] <= chunk:
+        return jnp.asarray(arr, dtype)
+    parts = [jnp.asarray(arr[s:s + chunk], dtype)
+             for s in range(0, arr.shape[0], chunk)]
+    return jnp.concatenate(parts)
+
+
 def device_graph(g: Graph, dtype=jnp.float32,
-                 pad_edges_to: int | None = None) -> DeviceGraph:
+                 pad_edges_to: int | None = None,
+                 weight_dtype=None,
+                 chunk_edges: int | None = None) -> DeviceGraph:
+    """Build the device-resident COO graph.
+
+    weight_dtype: storage dtype for the folded per-edge weights `w` (and
+    only them — inv_deg stays in `dtype` for its vertex-wise consumers).
+    Defaults to `dtype`; jnp.bfloat16 halves the weight array and the SpMV
+    upcasts to the solve dtype at multiply time (f32 accumulation), bounding
+    the parity cost to the one rounding of 1/deg.
+    chunk_edges: transfer the edge arrays to device in chunks of this many
+    edges (see `_chunked_device_1d`); None = one shot.
+    """
+    check_int32_range(g.n, g.m if pad_edges_to is None else pad_edges_to,
+                      what="device_graph")
+    wdtype = jnp.dtype(dtype) if weight_dtype is None else \
+        jnp.dtype(weight_dtype)
     deg = np.maximum(g.deg, 1).astype(np.float64)
     inv_deg = 1.0 / deg
     src, dst, w = g.src, g.dst, inv_deg[g.src]
@@ -93,12 +141,19 @@ def device_graph(g: Graph, dtype=jnp.float32,
         src = np.concatenate([src, zeros])
         dst = np.concatenate([dst, zeros])
         w = np.concatenate([w, np.zeros(pad)])
+    if chunk_edges is not None and chunk_edges > 0:
+        jsrc = _chunked_device_1d(src, jnp.int32, chunk_edges)
+        jdst = _chunked_device_1d(dst, jnp.int32, chunk_edges)
+        jw = _chunked_device_1d(w, wdtype, chunk_edges)
+    else:
+        jsrc, jdst, jw = (jnp.asarray(src), jnp.asarray(dst),
+                          jnp.asarray(w, wdtype))
     return DeviceGraph(
         n=g.n,
-        src=jnp.asarray(src),
-        dst=jnp.asarray(dst),
+        src=jsrc,
+        dst=jdst,
         inv_deg=jnp.asarray(inv_deg, dtype),
-        w=jnp.asarray(w, dtype),
+        w=jw,
     )
 
 
@@ -206,6 +261,7 @@ class EdgeSlots:
         cap = m if cap is None else cap
         if cap < m:
             raise ValueError(f"cap {cap} < edge count {m}")
+        check_int32_range(n, cap, what="EdgeSlots")
         src = np.zeros(cap, np.int32)
         dst = np.zeros(cap, np.int32)
         src[:m] = g.src
@@ -237,20 +293,30 @@ class EdgeSlots:
                    eslots=np.stack([fwd[of], rev[orr]], axis=1),
                    free=np.arange(m, cap, dtype=np.int64))
 
-    def to_device(self, dtype=jnp.float32) -> DeviceGraph:
+    def to_device(self, dtype=jnp.float32, weight_dtype=None,
+                  chunk_edges: int | None = None) -> DeviceGraph:
         """DeviceGraph over the mirror — identical arrays to
-        `device_graph(g, pad_edges_to=cap)` on the same graph.
+        `device_graph(g, pad_edges_to=cap)` on the same graph (same
+        weight_dtype/chunk_edges semantics too).
 
         src/dst are handed over as private COPIES: jax's CPU backend
         zero-copies aligned numpy arrays, and the mirror mutates its
         buffers in place on every apply_delta — an aliased device array
         would silently drift. (The float64 weights convert, which already
         makes a fresh buffer.)"""
+        wdtype = jnp.dtype(dtype) if weight_dtype is None else \
+            jnp.dtype(weight_dtype)
         inv = 1.0 / np.maximum(self.deg, 1)
-        return DeviceGraph(n=self.n, src=jnp.asarray(self.src.copy()),
-                           dst=jnp.asarray(self.dst.copy()),
-                           inv_deg=jnp.asarray(inv, dtype),
-                           w=jnp.asarray(self.w64, dtype))
+        if chunk_edges is not None and chunk_edges > 0:
+            jsrc = _chunked_device_1d(self.src.copy(), jnp.int32, chunk_edges)
+            jdst = _chunked_device_1d(self.dst.copy(), jnp.int32, chunk_edges)
+            jw = _chunked_device_1d(self.w64, wdtype, chunk_edges)
+        else:
+            jsrc, jdst, jw = (jnp.asarray(self.src.copy()),
+                              jnp.asarray(self.dst.copy()),
+                              jnp.asarray(self.w64, wdtype))
+        return DeviceGraph(n=self.n, src=jsrc, dst=jdst,
+                           inv_deg=jnp.asarray(inv, dtype), w=jw)
 
     def to_graph(self) -> Graph:
         """Host Graph of the live slots (slot order, which is NOT the
@@ -423,8 +489,12 @@ def patch_device_graph(dg: DeviceGraph, patch: SlotPatch) -> DeviceGraph:
 
 
 def _transition_matmul(dg: DeviceGraph, x: jax.Array) -> jax.Array:
-    """Shared spmv/spmm body: y[dst] += w[e] * x[src] over the edge list."""
+    """Shared spmv/spmm body: y[dst] += w[e] * x[src] over the edge list.
+    Weights may be stored packed (bf16); they upcast to the solve dtype at
+    multiply time so the segment_sum accumulates at full precision."""
     w = dg.w if dg.w is not None else dg.inv_deg[dg.src]
+    if w.dtype != x.dtype:
+        w = w.astype(x.dtype)
     contrib = x[dg.src] * (w if x.ndim == 1 else w[:, None])
     return jax.ops.segment_sum(contrib, dg.dst, num_segments=dg.n)
 

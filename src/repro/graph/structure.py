@@ -151,34 +151,47 @@ def reorder_bfs(g: Graph, start: int = 0) -> np.ndarray:
     position k.
     """
     n = g.n
-    # CSR neighbour lists for the BFS, sorted by degree for CM flavour.
-    order = np.argsort(g.src, kind="stable")
-    s_sorted, d_sorted = g.src[order], g.dst[order]
+    deg = g.deg
+    # CSR neighbour lists pre-sorted by (row, neighbour degree): each row's
+    # adjacency comes out lowest-degree-first, the CM flavour, without any
+    # per-vertex argsort inside the traversal.
+    order = np.lexsort((deg[g.dst], g.src))
+    d_sorted = g.dst[order]
+    counts = np.bincount(g.src, minlength=n).astype(np.int64)
     row_ptr = np.zeros(n + 1, np.int64)
-    np.cumsum(np.bincount(s_sorted, minlength=n), out=row_ptr[1:])
+    np.cumsum(counts, out=row_ptr[1:])
     visited = np.zeros(n, bool)
     perm = np.empty(n, np.int64)
     w = 0
-    deg = g.deg
     seeds = np.argsort(deg, kind="stable")  # low-degree seeds first
     seed_i = 0
-    frontier: list[int] = []
     while w < n:
-        if not frontier:
-            while visited[seeds[seed_i]]:
-                seed_i += 1
-            frontier = [int(seeds[seed_i])]
-            visited[frontier[0]] = True
-        nxt: list[int] = []
-        for u in frontier:
-            perm[w] = u
-            w += 1
-            nbrs = d_sorted[row_ptr[u]:row_ptr[u + 1]]
-            for vtx in nbrs[np.argsort(deg[nbrs], kind="stable")]:
-                if not visited[vtx]:
-                    visited[vtx] = True
-                    nxt.append(int(vtx))
-        frontier = nxt
+        while visited[seeds[seed_i]]:   # amortized O(n) over the whole run
+            seed_i += 1
+        frontier = seeds[seed_i:seed_i + 1]
+        visited[frontier] = True
+        while frontier.size:
+            perm[w:w + frontier.size] = frontier
+            w += frontier.size
+            # whole-frontier neighbour expansion as one flat-range gather:
+            # positions row_ptr[u] + 0..counts[u]-1 for every u, frontier
+            # order preserved (O(level edges), no python per-vertex loop)
+            cnt = counts[frontier]
+            total = int(cnt.sum())
+            if total == 0:
+                break
+            starts = np.repeat(row_ptr[frontier], cnt)
+            offs = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+            nbrs = d_sorted[starts + offs]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size == 0:
+                break
+            # first-occurrence dedup keeps the sequential-BFS claim order:
+            # a vertex reachable from several frontier members goes to the
+            # earliest (and, per row, lowest-degree-edge) one
+            _, first = np.unique(nbrs, return_index=True)
+            frontier = nbrs[np.sort(first)]
+            visited[frontier] = True
     return perm
 
 

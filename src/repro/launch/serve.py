@@ -50,6 +50,9 @@ def serve_pagerank(mod, args):
         cfg = replace(cfg, max_batch=args.max_batch)
     if args.engine:
         cfg = replace(cfg, engine=args.engine)
+    if args.weight_dtype:
+        cfg = replace(cfg, weight_dtype=None
+                      if args.weight_dtype == "float32" else args.weight_dtype)
     if args.mesh_grid:
         r, _, c = args.mesh_grid.partition("x")
         cfg = replace(cfg, mesh_grid=(int(r), int(c)))
@@ -150,9 +153,14 @@ def main(argv=None):
     ap.add_argument("--updates", type=int, default=0,
                     help="edge-update batches interleaved (pagerank only)")
     ap.add_argument("--engine", default=None,
-                    choices=["auto", "coo", "block_ell", "fused",
+                    choices=["auto", "coo", "hub-tail", "block_ell", "fused",
                              "sharded-1d", "sharded-2d"],
                     help="pagerank solve-engine override (default from config)")
+    ap.add_argument("--weight-dtype", default=None,
+                    choices=["float32", "bfloat16"],
+                    help="packed edge-weight storage dtype (bfloat16 halves "
+                         "the weight arrays; accumulation stays f32; "
+                         "pagerank only; default from config)")
     ap.add_argument("--mesh-grid", default=None, metavar="RxC",
                     help="sharded-2d grid override, e.g. 2x4 (pagerank only; "
                          "run under XLA_FLAGS=--xla_force_host_platform_"

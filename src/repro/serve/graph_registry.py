@@ -207,7 +207,9 @@ class GraphRegistry:
                  batch_hint: int | None = None, mesh=None,
                  grid: tuple[int, int] | None = None,
                  partition_lane: int = 128,
-                 update_mode: str = "incremental"):
+                 update_mode: str = "incremental",
+                 weight_dtype=None,
+                 ingest_chunk_edges: int | None = None):
         if update_mode not in UPDATE_MODES:
             raise ValueError(f"update_mode {update_mode!r} not in "
                              f"{UPDATE_MODES}")
@@ -220,6 +222,14 @@ class GraphRegistry:
         self.grid = grid
         self.partition_lane = partition_lane
         self.update_mode = update_mode
+        # packed storage dtype for edge weights / inv_deg on the COO and
+        # hub-tail paths (None = dtype); accumulation stays in `dtype`
+        self.weight_dtype = None if weight_dtype is None \
+            else jnp.dtype(weight_dtype)
+        # host->device transfer chunk for register(): bounds the peak extra
+        # host allocation at registration of paper-scale graphs (None = one
+        # shot; see graph.ops._chunked_device_1d)
+        self.ingest_chunk_edges = ingest_chunk_edges
         self._graphs: dict[str, RegisteredGraph] = {}
         self._schedules: dict[tuple[float, float], tuple[ChebSchedule, jax.Array]] = {}
         self._adaptive: dict[tuple[float, float, int | None], AdaptiveSchedule] = {}
@@ -245,12 +255,17 @@ class GraphRegistry:
             slots = EdgeSlots.from_graph(g, cap=_edge_bucket(g.m))
         except ValueError:
             slots = None
-        dg = slots.to_device(self.dtype) if slots is not None else \
-            device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m))
+        dg = slots.to_device(self.dtype, weight_dtype=self.weight_dtype,
+                             chunk_edges=self.ingest_chunk_edges) \
+            if slots is not None else \
+            device_graph(g, self.dtype, pad_edges_to=_edge_bucket(g.m),
+                         weight_dtype=self.weight_dtype,
+                         chunk_edges=self.ingest_chunk_edges)
         eng = select_engine(g, batch=self.batch_hint, mode=self.engine_mode,
                             dg=dg, dtype=self.dtype, stable_shapes=True,
                             mesh=self.mesh, grid=self.grid,
-                            lane=self.partition_lane)
+                            lane=self.partition_lane,
+                            weight_dtype=self.weight_dtype)
         return dg, eng, slots
 
     # ---- graphs -----------------------------------------------------------

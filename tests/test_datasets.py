@@ -1,0 +1,158 @@
+"""Dataset layer tests: SNAP loader, cache round-trip, Chung-Lu generator.
+
+Property tests run under hypothesis when installed and skip otherwise (see
+_hypothesis_compat); the fixed-seed tests always run.
+"""
+import gzip
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.graph import datasets
+from repro.graph.datasets import (CACHE_FORMAT_VERSION, cached_graph,
+                                  chung_lu, load_graph_cache,
+                                  load_snap_edgelist, save_graph_cache,
+                                  scale_dataset)
+from repro.graph.ops import check_int32_range
+from repro.graph.structure import Graph
+
+
+SNAP_TEXT = """\
+# Directed graph (each unordered pair of nodes is saved once)
+# Nodes: 5 Edges: 6
+% a percent comment, some mirrors use these
+0\t1
+1\t0
+1 2
+2 3
+3 3
+3 4
+"""
+
+
+class TestSnapLoader:
+    def test_parse_comments_dups_self_loops(self, tmp_path):
+        path = tmp_path / "toy.txt"
+        path.write_text(SNAP_TEXT)
+        g = load_snap_edgelist(str(path))
+        # unique undirected edges: (0,1) (1,2) (2,3) (3,4); the (1,0) dup
+        # and the 3-3 self loop collapse in from_undirected_edges
+        assert g.n == 5
+        assert g.validate_symmetric()
+        np.testing.assert_array_equal(g.deg, [1, 2, 2, 2, 1])
+
+    def test_gzip_transparent(self, tmp_path):
+        path = tmp_path / "toy.txt.gz"
+        with gzip.open(path, "wt") as f:
+            f.write(SNAP_TEXT)
+        g = load_snap_edgelist(str(path))
+        assert g.n == 5 and g.validate_symmetric()
+
+    def test_explicit_n_pads_isolated_vertices(self, tmp_path):
+        path = tmp_path / "toy.txt"
+        path.write_text("0 1\n")
+        g = load_snap_edgelist(str(path), n=4)
+        assert g.n == 4
+        # isolated vertices get self loops (the substrate's dangling fix)
+        assert g.deg[2] == 1 and g.deg[3] == 1
+
+
+class TestCache:
+    def test_round_trip(self, tmp_path):
+        g = chung_lu(2_000, avg_deg=8.0, seed=3)
+        path = str(tmp_path / "g.npz")
+        save_graph_cache(path, g)
+        for mmap in (True, False):
+            g2 = load_graph_cache(path, mmap=mmap)
+            assert g2 is not None
+            np.testing.assert_array_equal(g2.src, g.src)
+            np.testing.assert_array_equal(g2.dst, g.dst)
+            assert g2.n == g.n and g2.m == g.m
+
+    def test_version_mismatch_regenerates(self, tmp_path, monkeypatch):
+        calls = []
+
+        def build():
+            calls.append(1)
+            return chung_lu(500, avg_deg=6.0, seed=0)
+
+        g1 = cached_graph("toy", build, cache_dir=str(tmp_path))
+        assert len(calls) == 1
+        g2 = cached_graph("toy", build, cache_dir=str(tmp_path))
+        assert len(calls) == 1   # second call served from cache
+        np.testing.assert_array_equal(g2.src, g1.src)
+        # bump the format version: the old file's name no longer matches,
+        # so the builder runs again (stale binaries are never half-read)
+        monkeypatch.setattr(datasets, "CACHE_FORMAT_VERSION",
+                            CACHE_FORMAT_VERSION + 1)
+        cached_graph("toy", build, cache_dir=str(tmp_path))
+        assert len(calls) == 2
+
+    def test_corrupt_file_returns_none(self, tmp_path):
+        path = tmp_path / "bad.npz"
+        path.write_bytes(b"this is not an npz archive")
+        assert load_graph_cache(str(path)) is None
+
+    def test_scale_dataset_cached(self, tmp_path):
+        g = scale_dataset("chunglu-100k", cache_dir=str(tmp_path))
+        assert g.n == 100_000
+        files = os.listdir(tmp_path)
+        assert any(f.endswith(".npz") for f in files)
+        g2 = scale_dataset("chunglu-100k", cache_dir=str(tmp_path))
+        np.testing.assert_array_equal(g2.src, g.src)
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(KeyError):
+            scale_dataset("no-such-family")
+
+
+class TestChungLu:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(500, 4000), seed=st.integers(0, 2**16))
+    def test_symmetric_no_self_loops_except_isolated(self, n, seed):
+        g = chung_lu(n, avg_deg=8.0, seed=seed)
+        assert g.n == n
+        assert g.validate_symmetric()
+        # self loops only where from_undirected_edges patched an isolated
+        # vertex: every self-loop endpoint must have degree exactly 1
+        loops = g.src[g.src == g.dst]
+        if loops.size:
+            assert np.all(g.deg[np.unique(loops)] == 1)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_avg_degree_near_target(self, seed):
+        g = chung_lu(20_000, avg_deg=16.0, seed=seed)
+        # duplicate pairs collapse, so realized degree sits below the target
+        # but within the same band
+        assert 10.0 < g.avg_degree <= 17.0
+
+    def test_power_law_tail(self):
+        """The degree sequence must be heavy-tailed: with exponent 2 the max
+        degree grows ~ n / i0 while a homogeneous graph's max stays
+        O(log n) around the mean."""
+        g = chung_lu(100_000, avg_deg=16.0, exponent=2.0, seed=0)
+        deg = g.deg
+        assert deg.max() > 50 * deg.mean()
+        # hub mass: the top 1% of vertices carry a disproportionate share
+        top = np.sort(deg)[-g.n // 100:]
+        assert top.sum() > 0.15 * deg.sum()
+
+    def test_deterministic(self):
+        a = chung_lu(3_000, avg_deg=8.0, seed=7)
+        b = chung_lu(3_000, avg_deg=8.0, seed=7)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.dst, b.dst)
+
+
+class TestInt32Guard:
+    def test_in_range_passes(self):
+        check_int32_range(10, 100)
+
+    def test_overflow_raises_with_context(self):
+        with pytest.raises(ValueError, match="int32"):
+            check_int32_range(2**31, 10, what="test graph")
+        with pytest.raises(ValueError, match="int32"):
+            check_int32_range(10, 2**31, what="test graph")

@@ -1,0 +1,171 @@
+"""HubTailEngine tests: parity vs COO, degenerate splits, auto-selection,
+packed bf16 weights, serving integration, and the Grolmusz degree-prior
+oracle at paper scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_schedule
+from repro.core.engine import (HUB_TAIL_MIN_N, CooEngine, HubTailEngine,
+                               apply_counts, reset_apply_counts,
+                               select_engine)
+from repro.core.pagerank import cpaa_fixed, degree_prior
+from repro.graph import generators
+from repro.graph.datasets import chung_lu
+from repro.graph.ops import device_graph
+
+
+def _pagerank(eng, g, rounds=None, p=None):
+    """Normalized CPAA PageRank through an engine (the parity yardstick:
+    raw spmv maxabs is accumulation-order noise on big hub rows)."""
+    sched = make_schedule(0.85, 1e-6)
+    coeffs = jnp.asarray(sched.coeffs, jnp.float32)
+    if p is None:
+        p = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+    pi, _ = cpaa_fixed(eng, coeffs, p,
+                       rounds=sched.rounds if rounds is None else rounds)
+    return pi
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    return chung_lu(20_000, avg_deg=16.0, seed=1)
+
+
+class TestParity:
+    def test_f32_matches_coo(self, skewed):
+        g = skewed
+        ref = _pagerank(CooEngine(device_graph(g)), g)
+        ht = _pagerank(HubTailEngine.from_graph(g), g)
+        assert float(jnp.abs(ht - ref).sum()) <= 1e-5
+
+    def test_bf16_weights_within_rounding(self, skewed):
+        g = skewed
+        ref = _pagerank(CooEngine(device_graph(g)), g)
+        eng = HubTailEngine.from_graph(g, weight_dtype=jnp.bfloat16)
+        assert eng.weight_dtype == jnp.bfloat16
+        assert eng.dtype == jnp.float32    # solve dtype stays f32
+        ht = _pagerank(eng, g)
+        assert ht.dtype == jnp.float32
+        assert float(jnp.abs(ht - ref).sum()) <= 1e-3
+
+    def test_batched_personalizations(self, skewed):
+        g = skewed
+        rng = np.random.default_rng(0)
+        p = rng.random((g.n, 4)).astype(np.float32)
+        p /= p.sum(0, keepdims=True)
+        p = jnp.asarray(p)
+        ref = _pagerank(CooEngine(device_graph(g)), g, p=p)
+        ht = _pagerank(HubTailEngine.from_graph(g), g, p=p)
+        assert float(jnp.abs(ht - ref).sum(0).max()) <= 1e-5
+
+    def test_mass_preserved(self, skewed):
+        """P is column-stochastic; the sentinel-row trick must not leak
+        mass into (or out of) the padding."""
+        g = skewed
+        eng = HubTailEngine.from_graph(g)
+        x = jnp.asarray(np.random.default_rng(1).random(g.n, np.float32))
+        y = eng.apply(x)
+        assert y.shape == (g.n,)
+        np.testing.assert_allclose(float(y.sum()), float(x.sum()), rtol=1e-5)
+
+    @pytest.mark.parametrize("hub_min_deg", [1, 10**9])
+    def test_degenerate_splits(self, hub_min_deg):
+        """All-hub (every vertex panelized) and no-hub (pure tail
+        segment_sum) are both just P — the split point is a perf knob,
+        never a correctness one."""
+        g = generators.powerlaw_ba(2_000, m_attach=4, seed=2)
+        ref = _pagerank(CooEngine(device_graph(g)), g)
+        eng = HubTailEngine.from_graph(g, hub_min_deg=hub_min_deg)
+        if hub_min_deg == 1:
+            assert eng.n_hubs == g.n
+        else:
+            assert eng.n_hubs == 0
+        ht = _pagerank(eng, g)
+        assert float(jnp.abs(ht - ref).sum()) <= 1e-5
+
+
+class TestEngineContract:
+    def test_pytree_round_trip(self, skewed):
+        eng = HubTailEngine.from_graph(skewed)
+        leaves, treedef = jax.tree_util.tree_flatten(eng)
+        eng2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        x = jnp.asarray(
+            np.random.default_rng(0).random(skewed.n, np.float32))
+        np.testing.assert_array_equal(np.asarray(eng.apply(x)),
+                                      np.asarray(eng2.apply(x)))
+
+    def test_jit_no_retrace(self, skewed):
+        """The engine rides through jit as a pytree argument: new data,
+        same treedef -> no retrace (apply_counts counts trace-time calls)."""
+        eng = HubTailEngine.from_graph(skewed)
+        f = jax.jit(lambda e, x: e.apply(x))
+        reset_apply_counts()
+        x = jnp.asarray(
+            np.random.default_rng(0).random(skewed.n, np.float32))
+        jax.block_until_ready(f(eng, x))
+        jax.block_until_ready(f(eng, x + 1.0))
+        leaves, treedef = jax.tree_util.tree_flatten(eng)
+        eng2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        jax.block_until_ready(f(eng2, x))
+        assert apply_counts().get("hub_tail", 0) == 1
+
+    def test_refresh_rebuilds_current_graph(self):
+        g = generators.powerlaw_ba(3_000, m_attach=4, seed=0)
+        eng = HubTailEngine.from_graph(g, weight_dtype=jnp.bfloat16)
+        g2 = generators.powerlaw_ba(3_000, m_attach=5, seed=1)
+        eng2 = eng.refresh(g2)
+        assert eng2.n == g2.n
+        assert eng2.weight_dtype == jnp.bfloat16   # knobs survive refresh
+        ref = _pagerank(CooEngine(device_graph(g2)), g2)
+        assert float(jnp.abs(_pagerank(eng2, g2) - ref).sum()) <= 1e-3
+
+    def test_select_engine_forced_and_auto(self):
+        # forced, dash alias included (the CLI spells it hub-tail)
+        g = generators.powerlaw_ba(2_000, m_attach=4, seed=0)
+        assert select_engine(g, mode="hub-tail").name == "hub_tail"
+        # auto: a large skewed graph crosses both thresholds
+        big = chung_lu(HUB_TAIL_MIN_N, avg_deg=16.0, seed=0)
+        assert isinstance(select_engine(big, mode="auto"), HubTailEngine)
+        # ... a mesh has no hubs at all, so auto must NOT pick the split
+        mesh = generators.tri_mesh(40, 40)
+        assert not isinstance(select_engine(mesh, mode="auto"),
+                              HubTailEngine)
+
+
+class TestServing:
+    def test_registry_hub_tail_bf16_with_updates(self):
+        from repro.serve import GraphRegistry, PageRankService
+        g = generators.powerlaw_ba(2_000, m_attach=4, seed=3)
+        reg = GraphRegistry(engine="hub_tail", weight_dtype="bfloat16")
+        reg.register("g", g)
+        assert reg.get("g").engine.name == "hub_tail"
+        assert reg.get("g").engine.weight_dtype == jnp.bfloat16
+        svc = PageRankService(reg, max_batch=4, cache_capacity=16,
+                              max_top_k=8)
+        res = svc.query("g", (7,), tol=1e-6, top_k=8)
+        assert res.scores.shape == (8,)
+        assert np.all(np.isfinite(res.scores))
+        # update path: the refresh must keep the engine class and knobs
+        reg.apply_updates("g", insert=[(0, 1500)])
+        eng = reg.get("g").engine
+        assert eng.name == "hub_tail" and eng.weight_dtype == jnp.bfloat16
+        res2 = svc.query("g", (7,), tol=1e-6, top_k=8)
+        assert np.all(np.isfinite(res2.scores))
+
+
+class TestDegreePriorOracle:
+    def test_prior_is_stationary_at_scale(self):
+        """Grolmusz: on an undirected graph deg/2m is EXACTLY stationary
+        for P = A D^-1, so PageRank personalized at the degree prior
+        returns the prior at any damping — an analytic oracle that needs
+        no dense reference and therefore scales to n = 10^5."""
+        g = chung_lu(100_000, avg_deg=16.0, seed=0)
+        prior = degree_prior(g)
+        np.testing.assert_allclose(prior.sum(), 1.0, rtol=1e-12)
+        p = jnp.asarray(prior, jnp.float32)
+        for eng in (CooEngine(device_graph(g)),
+                    HubTailEngine.from_graph(g)):
+            pi = _pagerank(eng, g, p=p)
+            assert float(jnp.abs(pi - p).sum()) <= 1e-3
