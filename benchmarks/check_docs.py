@@ -1,0 +1,167 @@
+"""Markdown link-and-anchor checker for CI doc hygiene.
+
+    python benchmarks/check_docs.py [--root .] [FILES...]
+
+Validates every intra-repo markdown link in the repo's documentation set
+(README.md and friends at the root, plus everything under docs/):
+
+  * relative link targets must exist on disk (resolved against the file
+    containing the link);
+  * `#anchor` fragments — same-file or on a linked markdown file — must
+    match a heading's GitHub-style slug (lowercase, punctuation stripped,
+    spaces to hyphens, duplicate slugs suffixed -1, -2, ...);
+  * absolute http(s)/mailto links are skipped (no network in CI), as are
+    links inside fenced code blocks and inline code spans.
+
+Stdlib only, same contract as the other benchmarks/ checkers: prints a
+per-problem report and exits nonzero when anything is broken, so the CI
+lint step fails loudly instead of letting docs rot. Run by the `lint` job
+in .github/workflows/ci.yml; tests/test_check_docs.py pins the slugging
+and resolution rules.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# inline links/images: [text](target) — target may carry a #fragment
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^(```|~~~)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: strip markdown emphasis/code/link
+    syntax, lowercase, drop punctuation except word chars/spaces/hyphens,
+    spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links -> text
+    text = re.sub(r"[*_]", "", text)                      # emphasis
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _strip_code(lines: list[str]) -> list[str]:
+    """Blank out fenced code blocks and inline code spans (line count is
+    preserved so reported line numbers stay true)."""
+    out, in_fence = [], False
+    for ln in lines:
+        if _FENCE.match(ln.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else _CODE_SPAN.sub("", ln))
+    return out
+
+
+def anchors_of(path: str) -> set[str]:
+    """Every valid anchor slug of a markdown file (duplicate headings get
+    GitHub's -1, -2, ... suffixes)."""
+    with open(path, encoding="utf-8") as f:
+        lines = _strip_code(f.read().splitlines())
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for ln in lines:
+        mh = _HEADING.match(ln)
+        if not mh:
+            continue
+        slug = github_slug(mh.group(2))
+        k = counts.get(slug, 0)
+        counts[slug] = k + 1
+        slugs.add(slug if k == 0 else f"{slug}-{k}")
+    return slugs
+
+
+def check_file(path: str, anchor_cache: dict[str, set[str]]) -> list[str]:
+    """All broken links/anchors in one markdown file, as report strings."""
+    problems: list[str] = []
+    with open(path, encoding="utf-8") as f:
+        lines = _strip_code(f.read().splitlines())
+    base = os.path.dirname(path)
+
+    def anchors(p: str) -> set[str]:
+        p = os.path.normpath(p)
+        if p not in anchor_cache:
+            anchor_cache[p] = anchors_of(p)
+        return anchor_cache[p]
+
+    for lineno, ln in enumerate(lines, 1):
+        for m in _LINK.finditer(ln):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            ref, _, frag = target.partition("#")
+            if not ref:                       # same-file anchor
+                if frag and frag not in anchors(path):
+                    problems.append(f"{path}:{lineno}: broken anchor "
+                                    f"'#{frag}' (no such heading)")
+                continue
+            dest = os.path.normpath(os.path.join(base, ref))
+            if not os.path.exists(dest):
+                problems.append(f"{path}:{lineno}: broken link '{target}' "
+                                f"({dest} does not exist)")
+                continue
+            if frag:
+                if not dest.endswith((".md", ".markdown")):
+                    continue                  # only md anchors are checkable
+                if frag not in anchors(dest):
+                    problems.append(f"{path}:{lineno}: broken anchor "
+                                    f"'{target}' (no heading slug "
+                                    f"'#{frag}' in {dest})")
+    return problems
+
+
+# generated reference material (paper OCR, retrieval dumps) — not authored
+# docs; their artifact links point at sources this repo never carries
+GENERATED = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+
+
+def default_docs(root: str) -> list[str]:
+    """The documentation set: root-level *.md plus everything under
+    docs/, sorted for a stable report. Generated reference files
+    (`GENERATED`) are excluded — they are imported artifacts, not authored
+    documentation."""
+    out = [os.path.join(root, f) for f in os.listdir(root)
+           if f.endswith(".md") and f not in GENERATED]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for dirpath, _dirs, files in os.walk(docs):
+            out.extend(os.path.join(dirpath, f) for f in files
+                       if f.endswith(".md"))
+    return sorted(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="markdown files to check (default: root *.md "
+                         "and docs/**.md)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the default file set")
+    args = ap.parse_args(argv)
+    files = args.files or default_docs(args.root)
+    if not files:
+        print("check_docs: no markdown files found")
+        return 1
+    cache: dict[str, set[str]] = {}
+    problems: list[str] = []
+    for path in files:
+        problems.extend(check_file(path, cache))
+    for p in problems:
+        print(p)
+    n_links = len(files)
+    if problems:
+        print(f"\ncheck_docs: {len(problems)} broken link(s)/anchor(s) "
+              f"across {n_links} files")
+        return 1
+    print(f"check_docs: OK ({n_links} files, no broken links or anchors)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

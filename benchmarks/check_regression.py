@@ -1,15 +1,19 @@
 """Benchmark regression gate for CI.
 
 Compares the fresh `engine_compare`, `adaptive_compare`, `update_churn`,
-`scale_compare` AND `serve_pagerank` records of a `benchmarks.run --json`
-output against the committed baseline (BENCH_pagerank.json) and fails when
-any entry — keyed (family, B, engine) for engine_compare, (family, B,
-"engine/mode") for adaptive_compare, (family, batch_edges, "update/mode")
-for update_churn (per-batch update latency, so update-path regressions gate
-like solve regressions), (family, B, "scale-engine/weight_dtype") for the
-paper-scale per-iteration times, and (family, B, "serve/mean" |
-"serve/p99") for the serving section (the p99 key gates TAIL latency,
-which a mean can hide) — slowed down by more than --threshold.
+`scale_compare`, `serve_pagerank` AND `load_bench` records of a
+`benchmarks.run --json` output against the committed baseline
+(BENCH_pagerank.json) and fails when any entry — keyed (family, B, engine)
+for engine_compare, (family, B, "engine/mode") for adaptive_compare,
+(family, batch_edges, "update/mode") for update_churn (per-batch update
+latency, so update-path regressions gate like solve regressions), (family,
+B, "scale-engine/weight_dtype") for the paper-scale per-iteration times,
+(family, B, "serve/mean" | "serve/p99") for the serving section (the p99
+key gates TAIL latency, which a mean can hide), and (family, B,
+"load-tenant/sched" | "goodput-tenant/sched") for the open-loop scheduling
+section (per-tenant p99 under bursty load, plus goodput-under-SLO inverted
+to us-per-good-query so lower is better) — slowed down by more than
+--threshold.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -32,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import statistics
 import subprocess
 import sys
@@ -69,6 +74,18 @@ def _load_entries(path: str) -> dict[tuple, float]:
         # observability layer exists to catch
         out[(rec["family"], rec["B"], "serve/mean")] = rec["us_per_query"]
         out[(rec["family"], rec["B"], "serve/p99")] = rec["p99_us"]
+    for rec in payload.get("load_bench", []):
+        # open-loop scheduling: per-(tenant, scheduler) tail latency and
+        # goodput-under-SLO. Goodput (higher-better qps) is inverted to
+        # us-per-good-query so one lower-is-better threshold gates
+        # everything; a zero-goodput run simply drops the key (reported as
+        # one-sided, never a silent pass)
+        tag = f"{rec['tenant']}/{rec['scheduler']}"
+        if not math.isnan(rec["p99_us"]):
+            out[(rec["family"], rec["B"], f"load-{tag}")] = rec["p99_us"]
+        if rec.get("goodput_qps", 0.0) > 0.0:
+            out[(rec["family"], rec["B"], f"goodput-{tag}")] = \
+                1e6 / rec["goodput_qps"]
     return out
 
 
@@ -140,7 +157,7 @@ def main(argv=None) -> int:
         rel = ratios[key] / norm
         if key[2].startswith("update"):
             floor = args.min_us_update
-        elif key[2].startswith("serve"):
+        elif key[2].startswith(("serve", "load-", "goodput-")):
             floor = args.min_us_serve
         else:
             floor = args.min_us

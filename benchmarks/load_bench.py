@@ -1,0 +1,340 @@
+"""Open-loop load benchmark: FIFO vs deadline-aware scheduling under
+Poisson/bursty multi-tenant traffic.
+
+    PYTHONPATH=src python -m benchmarks.load_bench [--quick]
+
+The closed-loop serve bench (serve_pagerank_bench) measures solver
+throughput: it submits a fixed query set and drains it, so queueing never
+builds up. This bench measures the thing the scheduler tier exists for —
+TAIL latency under arrival pressure. An OPEN-LOOP generator emits arrivals
+on a wall-clock schedule regardless of how the service is doing (the
+coordinated-omission-free way to load a server), with two tenant classes on
+two graphs:
+
+  * `interactive` — steady Poisson arrivals of cheap queries on a small
+    mesh, with a tight latency budget (SLO);
+  * `batch`       — BURSTY arrivals (on/off modulated Poisson, same time-
+    average rate) of expensive queries on a ~16x larger mesh, loose SLO.
+
+Under FIFO, a batch burst queues several full-width expensive groups ahead
+of every interactive arrival — head-of-line blocking puts multiple big
+solves in front of a query whose budget fits one. The deadline scheduler
+dispatches by slack, so an interactive query waits for at most the
+non-preemptible solve in flight. Same seeded arrival trace, same offered
+rate, both schedulers: the p99 gap is the tentpole's headline.
+
+Rates and budgets SELF-CALIBRATE from measured solve times (a warm-up pass
+feeds the service's own `SolveTimeEstimator`), so the bench exercises the
+same contention regime on any machine speed. Per (scheduler, tenant) the
+records carry p50/p99/p999 latency and goodput-under-SLO (completed within
+budget per second, and as a fraction of all offered queries);
+benchmarks/check_regression.py gates the p99 and goodput keys like the
+solve benches. Latency is measured from the SCHEDULED arrival time, not the
+submit call — driver lateness penalizes both schedulers equally instead of
+hiding in the gaps (no coordinated omission).
+
+The arrival generators are seeded and deterministic (tests pin the exact
+sequences and their inter-arrival statistics); docs/scheduling.md's tuning
+guide mirrors the output fields.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+from repro.graph import generators
+from repro.serve import (AdmissionRejected, GraphRegistry, PageRankService,
+                         PPRQuery, ServeMetrics, TenantSpec)
+
+QUICK_DURATION_S = 3.0
+FULL_DURATION_S = 8.0
+
+
+# ---- seeded open-loop arrival processes -----------------------------------
+def poisson_arrivals(rate_qps: float, duration_s: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Absolute arrival times (seconds from 0) of a Poisson process.
+
+    Exponential inter-arrival gaps at `rate_qps`, truncated to
+    `duration_s`. Deterministic given the generator state: the same seed
+    replays the same trace.
+    """
+    if rate_qps <= 0.0 or duration_s <= 0.0:
+        return np.empty(0, np.float64)
+    n_exp = int(rate_qps * duration_s * 1.5) + 16
+    times = np.cumsum(rng.exponential(1.0 / rate_qps, n_exp))
+    while times[-1] < duration_s:   # rare: the 1.5x overdraw fell short
+        more = rng.exponential(1.0 / rate_qps, n_exp)
+        times = np.concatenate([times, times[-1] + np.cumsum(more)])
+    return times[times < duration_s]
+
+
+def bursty_arrivals(rate_qps: float, duration_s: float,
+                    rng: np.random.Generator, burst_factor: float = 5.0,
+                    on_fraction: float = 0.25,
+                    period_s: float = 1.0) -> np.ndarray:
+    """On/off modulated Poisson with time-average rate == `rate_qps`.
+
+    Each `period_s` window spends `on_fraction` of its span bursting at
+    `burst_factor` x the off rate; the off rate is solved so the
+    time-average equals `rate_qps` — bursty and plain Poisson traces at the
+    same nominal rate offer the SAME load, distributed differently.
+    Deterministic given the generator state.
+    """
+    if rate_qps <= 0.0 or duration_s <= 0.0:
+        return np.empty(0, np.float64)
+    base = rate_qps / (on_fraction * burst_factor + (1.0 - on_fraction))
+    out = []
+    t = 0.0
+    while t < duration_s:
+        for rate, span in ((burst_factor * base, on_fraction * period_s),
+                           (base, (1.0 - on_fraction) * period_s)):
+            seg = poisson_arrivals(rate, span, rng)
+            if seg.size:
+                out.append(t + seg)
+            t += span
+            if t >= duration_s:
+                break
+    times = np.concatenate(out) if out else np.empty(0, np.float64)
+    return times[times < duration_s]
+
+
+def make_trace(classes: list[dict], duration_s: float, seed: int = 0):
+    """The merged multi-tenant arrival trace, time-sorted and seeded.
+
+    classes: one dict per tenant class with keys `tenant`, `graph`, `n`
+    (vertex count for seed sampling), `pattern` ("poisson" | "bursty"),
+    `rate_qps`, `slo_s`, and optional bursty knobs (`burst_factor`,
+    `on_fraction`, `period_s`). Returns a list of
+    (t_arrival, tenant, graph, seeds, slo_s) tuples.
+    """
+    rng = np.random.default_rng(seed)
+    events = []
+    for cls in classes:
+        if cls["pattern"] == "bursty":
+            times = bursty_arrivals(
+                cls["rate_qps"], duration_s, rng,
+                burst_factor=cls.get("burst_factor", 5.0),
+                on_fraction=cls.get("on_fraction", 0.25),
+                period_s=cls.get("period_s", 1.0))
+        else:
+            times = poisson_arrivals(cls["rate_qps"], duration_s, rng)
+        events.extend((float(t), cls["tenant"], cls["graph"], cls["n"],
+                       cls["slo_s"]) for t in times)
+    events.sort(key=lambda e: e[0])
+    # seed-pair sampling AFTER the sort so the trace is a pure function of
+    # (classes, duration, seed), independent of per-class interleaving
+    out = []
+    for t, tenant, graph, n, slo in events:
+        a = int(rng.integers(0, n))
+        b = (a + int(rng.integers(1, n))) % n
+        out.append((t, tenant, graph, (a, b), slo))
+    return out
+
+
+# ---- the driver -----------------------------------------------------------
+def _make_service(scheduler: str, graphs: dict, max_batch: int,
+                  tenants, slack_margin_s: float, async_dispatch: bool):
+    registry = GraphRegistry()
+    for name, g in graphs.items():
+        registry.register(name, g)
+    return PageRankService(registry, max_batch=max_batch, cache_capacity=0,
+                           max_top_k=8, metrics=ServeMetrics(detail=False),
+                           scheduler=scheduler, tenants=tenants,
+                           slack_margin_s=slack_margin_s,
+                           async_dispatch=async_dispatch)
+
+
+def _warm(svc, graphs: dict) -> None:
+    """Compile every (graph, bucket) shape the run will hit and feed the
+    solve-time EWMAs, off the clock; counters reset afterwards.
+
+    Two passes: the first pays the jit trace/compile per shape, then the
+    estimator forgets it (`reset`) so the second pass's EWMAs hold steady-
+    state solve times only — calibration must not plan around compiles the
+    run will never see again."""
+    qid = -1_000_000
+    for _pass in range(2):
+        for name, g in graphs.items():
+            for size in (1, 2, 4, svc.max_batch):
+                if size > svc.max_batch:
+                    continue
+                for i in range(size):
+                    svc.submit(PPRQuery(qid=qid, graph=name,
+                                        seeds=(i % g.n, (i * 7 + 1) % g.n),
+                                        top_k=4))
+                    qid -= 1
+                svc.run_until_drained()
+        if _pass == 0:
+            svc.estimator.reset()
+    svc.metrics.registry.reset()
+
+
+def _drive(svc, trace):
+    """Replay one open-loop trace through a service on the wall clock.
+
+    Returns per-tenant dicts: scheduled-arrival-to-completion latencies
+    (seconds), offered counts, rejected counts — plus the run's wall time.
+    """
+    lat: dict[str, list[float]] = {}
+    offered: dict[str, int] = {}
+    rejected: dict[str, int] = {}
+    meta: dict[int, tuple[float, str]] = {}   # qid -> (t_sched, tenant)
+    start = time.perf_counter()
+    i = 0
+    while i < len(trace) or svc.pending():
+        now = time.perf_counter() - start
+        while i < len(trace) and trace[i][0] <= now:
+            t_sched, tenant, graph, seeds, _slo = trace[i]
+            offered[tenant] = offered.get(tenant, 0) + 1
+            q = PPRQuery(qid=i, graph=graph, seeds=seeds, top_k=4,
+                         tenant=tenant)
+            try:
+                svc.submit(q)
+                meta[i] = (t_sched, tenant)
+            except AdmissionRejected:
+                rejected[tenant] = rejected.get(tenant, 0) + 1
+            i += 1
+        done = svc.tick(force=(i >= len(trace)))
+        t_now = time.perf_counter() - start
+        for r in done:
+            t_sched, tenant = meta.pop(r.qid)
+            lat.setdefault(tenant, []).append(t_now - t_sched)
+        if not done and not svc.pending() and i < len(trace):
+            # idle until the next scheduled arrival (open loop: never early)
+            time.sleep(min(1e-3, max(0.0, trace[i][0]
+                                     - (time.perf_counter() - start))))
+    return lat, offered, rejected, time.perf_counter() - start
+
+
+def _percentiles_us(xs: list[float]) -> tuple[float, float, float]:
+    if not xs:
+        return (float("nan"),) * 3
+    p50, p99, p999 = np.percentile(np.asarray(xs) * 1e6, (50.0, 99.0, 99.9))
+    return float(p50), float(p99), float(p999)
+
+
+# ---- the benchmark --------------------------------------------------------
+def load_compare(quick: bool = True, seed: int = 0,
+                 duration_s: float | None = None, max_batch: int = 16):
+    """FIFO vs deadline scheduling over the same seeded open-loop trace.
+
+    Returns (csv_rows, records): the human table plus one structured
+    record per (scheduler, tenant) — p50/p99/p999 latency, SLO, goodput
+    qps and fraction — that BENCH_pagerank.json archives and
+    check_regression.py gates (keys `load-<tenant>/<sched>` on p99_us and
+    `goodput-<tenant>/<sched>` on the inverted goodput rate).
+    """
+    if duration_s is None:
+        duration_s = QUICK_DURATION_S if quick else FULL_DURATION_S
+    side = (24, 96) if quick else (30, 120)
+    graphs = {"small": generators.tri_mesh(side[0], side[0]),
+              "big": generators.tri_mesh(side[1], side[1])}
+
+    # calibration: warm a service and read its solve-time EWMAs — every
+    # rate and budget below is in units of MEASURED solve time, so the
+    # contention regime survives machine-speed differences
+    cal = _make_service("fifo", graphs, max_batch, tenants=(),
+                        slack_margin_s=0.0, async_dispatch=False)
+    _warm(cal, graphs)
+    t_i = max(cal.estimator.estimate("small", 4), 1e-5)
+    t_b = max(cal.estimator.estimate("big", max_batch), 4 * t_i)
+
+    # interactive budget: one non-preemptible big solve in flight plus a
+    # handful of small solves — achievable under EDF, missable under FIFO
+    # head-of-line blocking (which queues SEVERAL big groups ahead)
+    slo_i = t_b + 6.0 * t_i
+    slo_b = 12.0 * t_b
+    # deadline-scheduler knobs: release an interactive group once ~3 small
+    # solves of wait have accrued (margin = budget - 4*t_i); batch groups
+    # mostly release on full buckets during bursts
+    margin = max(slo_i - 4.0 * t_i, 0.0)
+    d_b = 4.0 * t_b + margin
+    tenants = (TenantSpec(name="interactive", priority=2, deadline_s=slo_i),
+               TenantSpec(name="batch", priority=1, deadline_s=d_b))
+
+    # offered load ~70% utilization: batch bursts deliver ~2.5 full-width
+    # expensive groups back to back, interactive stays steady
+    rate_b = max_batch / (2.0 * t_b)
+    rate_i = 0.2 / t_i
+    classes = [
+        {"tenant": "interactive", "graph": "small",
+         "n": graphs["small"].n, "pattern": "poisson",
+         "rate_qps": rate_i, "slo_s": slo_i},
+        {"tenant": "batch", "graph": "big", "n": graphs["big"].n,
+         "pattern": "bursty", "rate_qps": rate_b, "slo_s": slo_b,
+         "burst_factor": 5.0, "on_fraction": 0.25,
+         "period_s": max(8.0 * t_b, 0.05)},
+    ]
+    trace = make_trace(classes, duration_s, seed=seed)
+
+    out = [("scheduler", "tenant", "offered_qps", "completed", "rejected",
+            "p50_ms", "p99_ms", "p999_ms", "slo_ms", "goodput_qps",
+            "goodput_frac", "deadline_misses")]
+    records = []
+    slo_by_tenant = {c["tenant"]: c["slo_s"] for c in classes}
+    p99_by_sched: dict[str, float] = {}
+    for sched_name, async_d in (("fifo", False), ("deadline", True)):
+        svc = _make_service(sched_name, graphs, max_batch, tenants,
+                            slack_margin_s=margin if sched_name == "deadline"
+                            else 0.0, async_dispatch=async_d)
+        _warm(svc, graphs)
+        lat, offered, rejected, wall = _drive(svc, trace)
+        for cls in classes:
+            tenant = cls["tenant"]
+            xs = lat.get(tenant, [])
+            slo = slo_by_tenant[tenant]
+            p50, p99, p999 = _percentiles_us(xs)
+            good = sum(1 for x in xs if x <= slo)
+            n_off = offered.get(tenant, 0)
+            rec = {
+                "family": "load_bench", "B": int(max_batch),
+                "scheduler": sched_name, "tenant": tenant,
+                "pattern": cls["pattern"],
+                "offered_qps": cls["rate_qps"], "duration_s": duration_s,
+                "offered": n_off, "completed": len(xs),
+                "rejected": rejected.get(tenant, 0),
+                "p50_us": p50, "p99_us": p99, "p999_us": p999,
+                "slo_us": slo * 1e6,
+                "goodput_qps": good / wall if wall > 0 else 0.0,
+                "goodput_frac": good / n_off if n_off else 0.0,
+                "deadline_misses": int(
+                    svc.metrics.deadline_miss.total()),
+            }
+            records.append(rec)
+            out.append((sched_name, tenant,
+                        round(cls["rate_qps"], 1), len(xs),
+                        rec["rejected"], round(p50 / 1e3, 2),
+                        round(p99 / 1e3, 2), round(p999 / 1e3, 2),
+                        round(slo * 1e3, 2), round(rec["goodput_qps"], 1),
+                        round(rec["goodput_frac"], 3),
+                        rec["deadline_misses"]))
+            if tenant == "interactive":
+                p99_by_sched[sched_name] = p99
+    if len(p99_by_sched) == 2 and p99_by_sched["deadline"] > 0:
+        out.append(("p99_improvement", "interactive",
+                    f"{p99_by_sched['fifo'] / p99_by_sched['deadline']:.2f}x",
+                    "", "", "", "", "", "", "", "", ""))
+    return out, records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="seconds of offered traffic per scheduler "
+                         "(default 3 quick / 8 full)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    rows, _ = load_compare(quick=args.quick, seed=args.seed,
+                           duration_s=args.duration)
+    print("\n## open_loop_load_fifo_vs_deadline")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

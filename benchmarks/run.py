@@ -33,8 +33,9 @@ def main(argv=None) -> None:
 
     import jax
     from benchmarks import (adaptive_bench, engine_bench, kernels_bench,
-                            paper_tables, scale_bench, serve_pagerank_bench,
-                            sharded_bench, update_churn_bench)
+                            load_bench, paper_tables, scale_bench,
+                            serve_pagerank_bench, sharded_bench,
+                            update_churn_bench)
 
     sections: dict[str, list] = {}
     _emit(sections, "theory_check (paper §4.2 claims)",
@@ -80,6 +81,13 @@ def main(argv=None) -> None:
         rows=60 if quick else 100, cols=60 if quick else 100)
     _emit(sections, "ppr_serving_qps_vs_batch", sv_rows)
 
+    # open-loop load: FIFO vs deadline scheduling under seeded
+    # Poisson/bursty multi-tenant traffic — per-tenant p50/p99/p999 and
+    # goodput-under-SLO, gated like the solve benches (the interactive-p99
+    # gap is the scheduler tier's headline)
+    lb_rows, lb_records = load_bench.load_compare(quick=quick)
+    _emit(sections, "open_loop_load_fifo_vs_deadline", lb_rows)
+
     if not quick:
         _emit(sections, "figure3_err_vs_rounds (NACA0015 stand-in)",
               paper_tables.fig3_err_vs_rounds_and_time())
@@ -108,6 +116,7 @@ def main(argv=None) -> None:
             "update_churn": uc_records,
             "scale_compare": sc_records,
             "serve_pagerank": sv_records,
+            "load_bench": lb_records,
             "sections": sections,
         }
         with open(args.json, "w") as f:

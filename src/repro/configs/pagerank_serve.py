@@ -67,6 +67,25 @@ class PPRServeConfig:
     # only the counters behind the `stats` property. docs/observability.md
     # budgets the detail layer at <5% of us_per_solve.
     metrics_detail: bool = True
+    # scheduling tier (docs/scheduling.md): "fifo" is the historical
+    # arrival-order policy; "deadline" forms batches per-tenant/per-graph
+    # with EDF dispatch and deadline-aware batch closing
+    scheduler: str = "fifo"
+    # tenant classes as (name, priority, deadline_s, max_depth) rows;
+    # deadline_s None = no SLO, max_depth None = the admission_depth bound
+    tenants: tuple[tuple[str, int, float | None, int | None], ...] = ()
+    # latency budget for queries whose tenant declares none (seconds;
+    # None = unbounded)
+    default_deadline_s: float | None = None
+    # admission control: per-tenant queued-query bound (None = unbounded);
+    # a full queue rejects with AdmissionRejected instead of growing
+    admission_depth: int | None = None
+    # deadline safety margin: a batch releases once its slack (budget minus
+    # EWMA solve estimate) falls to this many seconds
+    slack_margin_s: float = 0.0
+    # overlap host batch formation for tick k+1 with the device solve of
+    # tick k (jax async dispatch; the fence moves to harvest time)
+    async_dispatch: bool = False
 
 
 def full_config() -> PPRServeConfig:
@@ -87,8 +106,10 @@ def serve_config(smoke: bool = False) -> PPRServeConfig:
 
 def make_service(cfg: PPRServeConfig):
     """Registry with every configured graph warm + the service over it."""
+    import math
     from repro.serve.graph_registry import GraphRegistry
     from repro.serve.pagerank_service import PageRankService, ServeMetrics
+    from repro.serve.scheduler import TenantSpec
     reg = GraphRegistry(engine=cfg.engine, batch_hint=cfg.max_batch,
                         grid=cfg.mesh_grid,
                         partition_lane=cfg.partition_lane,
@@ -98,6 +119,10 @@ def make_service(cfg: PPRServeConfig):
                         ingest_chunk_edges=cfg.ingest_chunk_edges)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
+    tenants = [TenantSpec(name=n, priority=p,
+                          deadline_s=math.inf if d is None else float(d),
+                          max_depth=md)
+               for n, p, d, md in cfg.tenants]
     svc = PageRankService(reg, max_batch=cfg.max_batch,
                           cache_capacity=cfg.cache_capacity,
                           max_top_k=cfg.max_top_k,
@@ -106,7 +131,12 @@ def make_service(cfg: PPRServeConfig):
                           invalidation_radius=cfg.invalidation_radius,
                           refresh_batch=cfg.refresh_batch,
                           refresh_rounds=cfg.refresh_rounds,
-                          metrics=ServeMetrics(detail=cfg.metrics_detail))
+                          metrics=ServeMetrics(detail=cfg.metrics_detail),
+                          scheduler=cfg.scheduler, tenants=tenants,
+                          default_deadline_s=cfg.default_deadline_s,
+                          admission_depth=cfg.admission_depth,
+                          slack_margin_s=cfg.slack_margin_s,
+                          async_dispatch=cfg.async_dispatch)
     reg.schedule(cfg.c, cfg.tol)  # precompute the coefficient vector
     return svc
 

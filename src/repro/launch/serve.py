@@ -66,6 +66,32 @@ def serve_pagerank(mod, args):
         # negative = blanket flush (the pre-selective behavior)
         cfg = replace(cfg, invalidation_radius=args.invalidation_radius
                       if args.invalidation_radius >= 0 else None)
+    if args.scheduler:
+        cfg = replace(cfg, scheduler=args.scheduler)
+    if args.tenant:
+        # --tenant name:priority:deadline_s[:max_depth], repeatable
+        rows = []
+        for spec in args.tenant:
+            parts = spec.split(":")
+            if len(parts) not in (3, 4):
+                raise SystemExit(f"--tenant {spec!r}: expected "
+                                 "name:priority:deadline_s[:max_depth]")
+            name, prio, dl = parts[0], int(parts[1]), parts[2]
+            depth = int(parts[3]) if len(parts) == 4 else None
+            rows.append((name, prio,
+                         None if dl in ("inf", "none", "") else float(dl),
+                         depth))
+        cfg = replace(cfg, tenants=tuple(rows))
+    if args.deadline is not None:
+        cfg = replace(cfg, default_deadline_s=args.deadline
+                      if args.deadline > 0 else None)
+    if args.admission_depth is not None:
+        cfg = replace(cfg, admission_depth=args.admission_depth
+                      if args.admission_depth > 0 else None)
+    if args.slack_margin is not None:
+        cfg = replace(cfg, slack_margin_s=args.slack_margin)
+    if args.async_dispatch is not None:
+        cfg = replace(cfg, async_dispatch=args.async_dispatch)
     svc = mod.make_service(cfg)
     names = svc.registry.names()
     engines = {name: svc.registry.get(name).engine.name for name in names}
@@ -121,6 +147,7 @@ def serve_pagerank(mod, args):
     mode = "adaptive" if svc.adaptive else "fixed"
     snap = svc.metrics.snapshot(meta={
         "elapsed_s": dt, "arch": args.arch, "mode": mode,
+        "scheduler": svc.policy, "async_dispatch": svc.async_dispatch,
         "update_mode": svc.registry.update_mode, "engines": engines,
         "backend": jax.default_backend(),
         "served": len(results),
@@ -185,6 +212,37 @@ def main(argv=None):
                          "hops of an update's touched vertices and retain "
                          "the rest; negative = blanket flush (pagerank "
                          "only; default from config)")
+    ap.add_argument("--scheduler", default=None,
+                    choices=["fifo", "deadline"],
+                    help="query scheduling policy: arrival-order (fifo) or "
+                         "per-tenant EDF with deadline-aware batch closing "
+                         "(pagerank only; default from config; see "
+                         "docs/scheduling.md)")
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME:PRIO:DL[:DEPTH]",
+                    help="declare a tenant class, repeatable: name, "
+                         "priority (higher dispatches first at equal "
+                         "deadline), default latency budget in seconds "
+                         "(inf = no SLO), optional admission depth "
+                         "(pagerank only)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="default latency budget in seconds for queries "
+                         "whose tenant declares none (<= 0 = unbounded; "
+                         "pagerank only)")
+    ap.add_argument("--admission-depth", type=int, default=None,
+                    help="per-tenant queued-query bound; a full queue "
+                         "rejects instead of growing (<= 0 = unbounded; "
+                         "pagerank only)")
+    ap.add_argument("--slack-margin", type=float, default=None,
+                    help="deadline safety margin in seconds: release a "
+                         "batch once slack falls to this (pagerank only)")
+    ap.add_argument("--async-dispatch", dest="async_dispatch",
+                    action="store_true", default=None,
+                    help="overlap host batching for tick k+1 with the "
+                         "device solve of tick k (pagerank only)")
+    ap.add_argument("--sync-dispatch", dest="async_dispatch",
+                    action="store_false",
+                    help="dispatch and fence each batch in its own tick")
     ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
                     help="serve Prometheus text at /metrics and the JSON "
                          "snapshot at /metrics.json on this port while the "

@@ -3,3 +3,6 @@ from repro.serve.graph_registry import GraphRegistry, RegisteredGraph
 from repro.serve.pagerank_service import (PageRankService, PPRQuery,
                                           PPRResult, ServeMetrics)
 from repro.serve.result_cache import ResultCache
+from repro.serve.scheduler import (AdmissionRejected, DeadlineScheduler,
+                                   FifoScheduler, QueueEntry,
+                                   SolveTimeEstimator, TenantSpec)

@@ -201,7 +201,25 @@ class _RegistryObs:
 
 
 class GraphRegistry:
-    """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache."""
+    """Name -> RegisteredGraph, plus the shared (c, tol) schedule cache.
+
+    Args:
+        dtype: accumulation dtype of device graphs and solves.
+        engine: engine selection mode for `select_engine` ("auto" picks
+            COO / hub-tail / block-ELL / sharded per graph shape).
+        batch_hint: expected micro-batch width, steering auto selection.
+        mesh, grid, partition_lane: sharded-engine placement knobs.
+        update_mode: "incremental" (in-place device patch when the batch
+            fits the edge bucket) or "rebuild" (always the full path).
+        weight_dtype: packed storage dtype for edge weights / inv_deg
+            (None = `dtype`); accumulation stays in `dtype`.
+        ingest_chunk_edges: host->device transfer chunk at registration
+            (None = one shot).
+
+    Invariant: `rg.engine` is always current for (graph, epoch) — every
+    effective update refreshes or rebuilds it before the epoch bump
+    returns, so the tick path never reselects or retraces formats.
+    """
 
     def __init__(self, dtype=jnp.float32, engine: str = "auto",
                  batch_hint: int | None = None, mesh=None,
@@ -270,6 +288,15 @@ class GraphRegistry:
 
     # ---- graphs -----------------------------------------------------------
     def register(self, name: str, g: Graph) -> RegisteredGraph:
+        """Register `g` under `name`: build its device graph + engine once
+        and keep them warm (epoch 0).
+
+        Returns: the new `RegisteredGraph`.
+
+        Raises:
+            ValueError: the name is already registered (re-registration
+                would silently orphan cached epochs — update instead).
+        """
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
         t0 = time.perf_counter()
@@ -283,11 +310,17 @@ class GraphRegistry:
         return rg
 
     def get(self, name: str) -> RegisteredGraph:
+        """The registered graph for `name`.
+
+        Raises:
+            KeyError: unknown name (the message lists the known ones).
+        """
         if name not in self._graphs:
             raise KeyError(f"unknown graph {name!r}; known: {sorted(self._graphs)}")
         return self._graphs[name]
 
     def names(self) -> list[str]:
+        """Sorted names of every registered graph."""
         return sorted(self._graphs)
 
     # ---- dynamic updates --------------------------------------------------

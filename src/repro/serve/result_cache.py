@@ -31,6 +31,18 @@ __all__ = ["ResultCache"]
 
 
 class ResultCache:
+    """Bounded LRU of ranked PPR answers, keyed by
+    (graph, epoch, seeds, c, tol), with a per-graph invalidation index.
+
+    Args:
+        capacity: maximum live entries; 0 (or negative) disables caching
+            entirely — `put` becomes a no-op and every lookup misses.
+
+    Invariant: `_by_graph` mirrors `_d` exactly (every live key appears
+    under its graph, no dead keys linger), so graph-wide invalidation is
+    O(entries for that graph), never a full-capacity scan.
+    """
+
     def __init__(self, capacity: int):
         self.capacity = int(capacity)
         self._d: OrderedDict = OrderedDict()
@@ -78,9 +90,12 @@ class ResultCache:
         return None
 
     def count_hit(self, n: int = 1) -> None:
+        """Settle `n` queries' disposition as served-from-cache (pairs with
+        `lookup`, which never counts)."""
         self.hits += n
 
     def count_miss(self, n: int = 1) -> None:
+        """Settle `n` queries' disposition as answered-by-solve."""
         self.misses += n
 
     def _index_discard(self, key) -> None:
@@ -91,6 +106,8 @@ class ResultCache:
                 del self._by_graph[key[0]]
 
     def put(self, key, value) -> None:
+        """Insert (or refresh) one entry, evicting least-recent entries
+        past capacity. No-op when caching is disabled (capacity <= 0)."""
         if self.capacity <= 0:
             return
         if key in self._d:
@@ -149,6 +166,8 @@ class ResultCache:
         return dropped, retained_keys
 
     def stats(self) -> dict:
+        """Point-in-time counter dict: size, capacity, hits, misses,
+        evictions, invalidations, retained."""
         return {"size": len(self._d), "capacity": self.capacity,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,

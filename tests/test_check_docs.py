@@ -1,0 +1,109 @@
+"""Unit tests for the CI markdown link-and-anchor checker
+(benchmarks/check_docs.py): GitHub slugging rules, duplicate-heading
+suffixes, broken link/anchor detection, code-block skipping, and the
+default documentation file set."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "benchmarks"))
+import check_docs  # noqa: E402
+from check_docs import (anchors_of, check_file, default_docs,  # noqa: E402
+                        github_slug, main)
+
+
+class TestSlugging:
+    def test_lowercase_punctuation_spaces(self):
+        assert github_slug("Hello, World!") == "hello-world"
+        assert github_slug("A query's lifecycle") == "a-querys-lifecycle"
+        assert github_slug("Graph updates and staleness") == \
+            "graph-updates-and-staleness"
+
+    def test_inline_code_emphasis_and_links_unwrapped(self):
+        assert github_slug("The `tick()` loop") == "the-tick-loop"
+        assert github_slug("**Bold** and _em_") == "bold-and-em"
+        assert github_slug("See [docs](docs/x.md) here") == "see-docs-here"
+
+    def test_hyphens_kept(self):
+        assert github_slug("Deadline-aware batching") == \
+            "deadline-aware-batching"
+
+    def test_duplicate_headings_get_suffixes(self, tmp_path):
+        p = tmp_path / "dup.md"
+        p.write_text("## Setup\ntext\n## Setup\n### Setup\n")
+        assert anchors_of(str(p)) == {"setup", "setup-1", "setup-2"}
+
+
+class TestLinkChecking:
+    def test_broken_file_link_reported(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("see [other](missing.md)\n")
+        problems = check_file(str(p), {})
+        assert len(problems) == 1 and "missing.md" in problems[0]
+
+    def test_valid_relative_link_and_anchor(self, tmp_path):
+        (tmp_path / "b.md").write_text("# Target Page\n## Real Section\n")
+        p = tmp_path / "a.md"
+        p.write_text("[ok](b.md)\n[ok](b.md#real-section)\n"
+                     "[bad](b.md#no-such)\n")
+        problems = check_file(str(p), {})
+        assert len(problems) == 1 and "#no-such" in problems[0]
+
+    def test_same_file_anchor(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("# My Title\n[up](#my-title)\n[bad](#nope)\n")
+        problems = check_file(str(p), {})
+        assert len(problems) == 1 and "#nope" in problems[0]
+
+    def test_links_inside_code_are_skipped(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("```\n[gone](missing.md)\n```\n"
+                     "and `[also gone](missing.md)` inline\n")
+        assert check_file(str(p), {}) == []
+
+    def test_headings_inside_code_are_not_anchors(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("```\n# not a heading\n```\n[x](#not-a-heading)\n")
+        problems = check_file(str(p), {})
+        assert len(problems) == 1
+
+    def test_external_schemes_skipped(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("[x](https://example.com/nope)\n"
+                     "[y](mailto:a@b.c)\n")
+        assert check_file(str(p), {}) == []
+
+    def test_image_links_checked_too(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("![fig](missing.png)\n")
+        problems = check_file(str(p), {})
+        assert len(problems) == 1 and "missing.png" in problems[0]
+
+    def test_line_numbers_survive_code_stripping(self, tmp_path):
+        p = tmp_path / "a.md"
+        p.write_text("```\ncode\ncode\n```\n[bad](missing.md)\n")
+        problems = check_file(str(p), {})
+        assert problems[0].startswith(f"{p}:5:")
+
+
+class TestDefaultSet:
+    def test_root_and_docs_collected_generated_excluded(self, tmp_path):
+        (tmp_path / "README.md").write_text("# x\n")
+        (tmp_path / "PAPERS.md").write_text("[broken](nope.jpg)\n")
+        docs = tmp_path / "docs"
+        docs.mkdir()
+        (docs / "guide.md").write_text("# g\n")
+        files = default_docs(str(tmp_path))
+        names = {pathlib.Path(f).name for f in files}
+        assert names == {"README.md", "guide.md"}
+
+    def test_main_exit_codes(self, tmp_path):
+        good = tmp_path / "good.md"
+        good.write_text("# ok\n[self](#ok)\n")
+        bad = tmp_path / "bad.md"
+        bad.write_text("[x](missing.md)\n")
+        assert main([str(good)]) == 0
+        assert main([str(good), str(bad)]) == 1
+
+    def test_repo_docs_are_clean(self):
+        root = str(pathlib.Path(__file__).parent.parent)
+        assert main(["--root", root]) == 0

@@ -1,0 +1,89 @@
+"""Open-loop load generation: seeded determinism and the inter-arrival
+statistics the fifo-vs-deadline comparison rests on (same seed -> same
+offered load; Poisson gaps average 1/rate; bursty keeps the time-average
+rate while concentrating arrivals into the on-window)."""
+import numpy as np
+
+from benchmarks.load_bench import (bursty_arrivals, make_trace,
+                                   poisson_arrivals)
+
+
+class TestDeterminism:
+    def test_poisson_same_seed_same_trace(self):
+        a = poisson_arrivals(50.0, 10.0, np.random.default_rng(7))
+        b = poisson_arrivals(50.0, 10.0, np.random.default_rng(7))
+        np.testing.assert_array_equal(a, b)
+        c = poisson_arrivals(50.0, 10.0, np.random.default_rng(8))
+        assert a.shape != c.shape or not np.array_equal(a, c)
+
+    def test_bursty_same_seed_same_trace(self):
+        a = bursty_arrivals(50.0, 10.0, np.random.default_rng(7))
+        b = bursty_arrivals(50.0, 10.0, np.random.default_rng(7))
+        np.testing.assert_array_equal(a, b)
+
+    def test_make_trace_is_a_pure_function_of_seed(self):
+        classes = [
+            {"tenant": "i", "graph": "small", "n": 100,
+             "pattern": "poisson", "rate_qps": 40.0, "slo_s": 0.1},
+            {"tenant": "b", "graph": "big", "n": 400,
+             "pattern": "bursty", "rate_qps": 10.0, "slo_s": 1.0},
+        ]
+        t1 = make_trace(classes, duration_s=5.0, seed=3)
+        t2 = make_trace(classes, duration_s=5.0, seed=3)
+        assert t1 == t2
+        assert t1 != make_trace(classes, duration_s=5.0, seed=4)
+
+    def test_trace_is_time_sorted_with_valid_seeds(self):
+        classes = [{"tenant": "i", "graph": "g", "n": 50,
+                    "pattern": "poisson", "rate_qps": 30.0, "slo_s": 0.1}]
+        trace = make_trace(classes, duration_s=5.0, seed=0)
+        times = [t for t, *_ in trace]
+        assert times == sorted(times)
+        for _, tenant, graph, seeds, slo in trace:
+            assert tenant == "i" and graph == "g" and slo == 0.1
+            assert all(0 <= s < 50 for s in seeds)
+
+
+class TestInterArrivalStatistics:
+    def test_poisson_mean_gap_is_one_over_rate(self):
+        rate = 200.0
+        times = poisson_arrivals(rate, 30.0, np.random.default_rng(0))
+        gaps = np.diff(times)
+        # ~6000 samples: the sample mean sits within a few percent of 1/rate
+        assert abs(gaps.mean() * rate - 1.0) < 0.1
+
+    def test_poisson_bounded_to_duration(self):
+        times = poisson_arrivals(100.0, 4.0, np.random.default_rng(1))
+        assert times.size > 0
+        assert times.min() >= 0.0 and times.max() < 4.0
+
+    def test_bursty_preserves_the_time_average_rate(self):
+        """Bursty and plain Poisson at the same nominal rate offer the
+        SAME load — the comparison's equal-offered-rate premise."""
+        rate = 200.0
+        times = bursty_arrivals(rate, 30.0, np.random.default_rng(2))
+        assert abs(times.size / 30.0 / rate - 1.0) < 0.1
+
+    def test_bursty_is_burstier_than_poisson(self):
+        rng = np.random.default_rng(3)
+        pois = np.diff(poisson_arrivals(200.0, 30.0, rng))
+        burst = np.diff(bursty_arrivals(200.0, 30.0, rng,
+                                        burst_factor=5.0))
+        cv = lambda x: x.std() / x.mean()
+        assert cv(pois) < 1.3          # exponential gaps: CV ~ 1
+        assert cv(burst) > cv(pois) * 1.2
+
+    def test_bursty_concentrates_into_the_on_window(self):
+        times = bursty_arrivals(200.0, 30.0, np.random.default_rng(4),
+                                burst_factor=5.0, on_fraction=0.25,
+                                period_s=1.0)
+        phase = np.mod(times, 1.0)
+        on_share = np.mean(phase < 0.25)
+        # expected on-window share: 5*0.25 / (5*0.25 + 0.75) = 0.625
+        assert on_share > 0.5
+
+    def test_zero_rate_and_zero_duration_yield_empty(self):
+        rng = np.random.default_rng(0)
+        assert poisson_arrivals(0.0, 10.0, rng).size == 0
+        assert poisson_arrivals(10.0, 0.0, rng).size == 0
+        assert bursty_arrivals(0.0, 10.0, rng).size == 0
