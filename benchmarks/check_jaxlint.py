@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""CI entry point for the jaxlint static analysis (see repro.analysis).
+
+Dependency-free on purpose: the framework is stdlib-only (ast + json), so
+the CI `lint` job runs it on a bare Python without installing jax — same
+pattern as check_docs.py. Locally:
+
+    python benchmarks/check_jaxlint.py            # lint src/ vs baseline
+    python benchmarks/check_jaxlint.py --update-baseline
+    PYTHONPATH=src python -m repro.analysis src/  # identical
+"""
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis.runner import run  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--root" not in argv:
+        argv = ["--root", str(REPO_ROOT)] + argv
+    raise SystemExit(run(argv))

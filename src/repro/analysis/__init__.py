@@ -1,0 +1,43 @@
+"""JAX-aware static analysis for this codebase (jaxlint).
+
+The repo's load-bearing invariants — f32 accumulation over bf16 storage,
+pytree-registered engines that must not retrace per tick, the zero-mass
+padding contract, fence-point-only device blocking — lived in prose and
+reviewer memory. This package turns them into machine-checked rules:
+
+  * `repro.analysis.core`   — the framework: `Rule` registry, `Finding`,
+    per-rule `LintConfig`, `# jaxlint: disable=RULE` inline suppressions,
+    and the per-file runner.
+  * `repro.analysis.rules`  — the six JAX-specific rules (JL001..JL006)
+    tuned to this codebase; see docs/static-analysis.md for the catalog.
+  * `repro.analysis.baseline` — the checked-in findings baseline
+    (`jaxlint_baseline.json`): known, justified findings that do not fail
+    the build, fingerprinted so line drift does not invalidate them.
+  * `repro.analysis.runner` — the CLI (`python -m repro.analysis src/`,
+    mirrored by `benchmarks/check_jaxlint.py` for CI).
+  * `repro.analysis.sanitize` — the RUNTIME tier: jax.config transfer
+    guard / debug_nans / tracer-leak checking applied per test module
+    under `pytest --sanitize`, with opt-outs in `sanitize_optouts.json`.
+  * `repro.analysis.retrace` — `RetraceGate`, the hard steady-state
+    recompile gate over the engines' trace-time apply signatures.
+
+The static side (core/rules/baseline/runner) is stdlib-only — no jax
+import — so the CI lint job runs it without installing the stack. The
+runtime side imports jax lazily.
+"""
+from repro.analysis.baseline import Baseline, BaselineEntry, fingerprint
+from repro.analysis.core import (Finding, LintConfig, Rule, all_rules,
+                                 lint_file, lint_paths, lint_source)
+
+__all__ = [
+    "Baseline",
+    "BaselineEntry",
+    "Finding",
+    "LintConfig",
+    "Rule",
+    "all_rules",
+    "fingerprint",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,4 @@
+"""`python -m repro.analysis` — the jaxlint CLI (see runner.py)."""
+from repro.analysis.runner import main
+
+main()

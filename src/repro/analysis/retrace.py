@@ -1,0 +1,84 @@
+"""RetraceGate: the runtime complement to the JL002 lint rule.
+
+The static rule catches per-call `jax.jit` construction; this gate catches
+every OTHER way a recompile sneaks into steady state (pytree aux churn,
+weak-type flips, shape drift from a resize, a new donate signature). It
+leans on `core.engine`'s trace-time apply log: engine `apply()` bodies run
+at TRACE time under jit, so each log entry is one compilation of the solve
+and records the operand signature that triggered it.
+
+Usage (the serve tests wrap their steady-state tick loop):
+
+    warm up the service ...
+    with RetraceGate():          # zero recompiles allowed
+        for _ in range(50):
+            svc.tick()
+
+On violation the gate raises `RetraceError` listing each offending
+(engine, "shape dtype") signature against the set seen during warmup —
+the diff names the axis that churned, which is the debugging starting
+point the bare counter never gave.
+
+Unlike the rest of `repro.analysis`, this module needs jax (imported via
+`core.engine`); the lint CLI never imports it, keeping the CI lint job
+dependency-free.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core import engine as _engine
+
+__all__ = ["RetraceError", "RetraceGate"]
+
+
+class RetraceError(AssertionError):
+    """A jitted hot path recompiled inside a RetraceGate block."""
+
+
+class RetraceGate:
+    """Context manager asserting no engine apply() traces happen inside.
+
+    `allowed` > 0 tolerates that many trace events (e.g. a test that
+    deliberately changes batch width once). The gate snapshots the global
+    trace log on entry, so gates can nest and interleave with unrelated
+    jit activity BEFORE entry; activity INSIDE the block is attributed to
+    the block.
+    """
+
+    def __init__(self, allowed: int = 0):
+        self.allowed = allowed
+        self.events: list[tuple[str, str]] = []
+        self._mark = 0
+        self._warm: Counter | None = None
+
+    def __enter__(self) -> "RetraceGate":
+        log = _engine.apply_trace_log()
+        self._mark = len(log)
+        self._warm = Counter(log)   # signatures seen before the gate
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.events = _engine.apply_trace_log()[self._mark:]
+        if exc_type is None and len(self.events) > self.allowed:
+            raise RetraceError(self._describe())
+        return False
+
+    def _describe(self) -> str:
+        warm = self._warm or Counter()
+        lines = [
+            f"{len(self.events)} engine retrace(s) inside a RetraceGate "
+            f"(allowed {self.allowed}) — a jitted hot path recompiled in "
+            "steady state:"
+        ]
+        for name, sig in self.events:
+            status = ("signature already traced during warmup — pytree/"
+                      "static-arg churn, not a shape change"
+                      if (name, sig) in warm
+                      else "NEW signature — shape/dtype drift into the "
+                           "hot path")
+            lines.append(f"  {name}: {sig}  [{status}]")
+        if warm:
+            seen = ", ".join(f"{n}: {s}" for (n, s) in sorted(warm))
+            lines.append(f"  warmup signatures were: {seen}")
+        return "\n".join(lines)

@@ -1,0 +1,535 @@
+"""The six JAX-specific lint rules (JL001..JL006).
+
+Each rule guards one invariant this codebase's performance story depends
+on; docs/static-analysis.md is the catalog (invariant, example finding,
+how to suppress). Rules are AST-only — heuristic by construction — and
+tuned to THIS repo's conventions through `LintConfig`; inline
+`# jaxlint: disable=` suppressions and the baseline file absorb the
+deliberate exceptions, so a clean run means "no NEW violations", not "no
+judgment calls were made".
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, register)
+
+__all__ = ["ImplicitTransferRule", "RetraceHazardRule", "DtypeContractRule",
+           "PytreeDriftRule", "DonatedReuseRule", "BlockingCallRule"]
+
+
+# --------------------------------------------------------------------------
+# shared walking helpers
+
+def _walk_with_function(tree: ast.AST):
+    """Yield (node, enclosing_function_name_stack) over the whole tree."""
+    stack: list[str] = []
+
+    def rec(node):
+        is_func = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        if is_func:
+            stack.append(node.name)
+        yield node, tuple(stack)
+        for child in ast.iter_child_nodes(node):
+            yield from rec(child)
+        if is_func:
+            stack.pop()
+
+    yield from rec(tree)
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """Trailing name of the callee: f() -> "f", a.b.c() -> "c"."""
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+def _receiver_name(node: ast.Call) -> str | None:
+    """For m.f(...), the name `m` (None for deeper chains / plain calls)."""
+    if isinstance(node.func, ast.Attribute) and \
+            isinstance(node.func.value, ast.Name):
+        return node.func.value.id
+    return None
+
+
+def _contains_static_marker(node: ast.AST) -> bool:
+    """Expression is shape/metadata arithmetic, not a traced value: touches
+    .shape/.ndim/.size/.dtype or len()/range() anywhere inside."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and \
+                sub.attr in ("shape", "ndim", "size", "dtype"):
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) and \
+                sub.func.id in ("len", "range", "ord", "min", "max"):
+            return True
+    return False
+
+
+def _norm_target(node: ast.AST):
+    """Hashable identity of a Name / self-style Attribute chain (ctx-free),
+    None for anything more complex."""
+    if isinstance(node, ast.Name):
+        return ("name", node.id)
+    if isinstance(node, ast.Attribute):
+        base = _norm_target(node.value)
+        if base is None:
+            return None
+        return ("attr", base, node.attr)
+    return None
+
+
+# --------------------------------------------------------------------------
+# JL001 — implicit host<->device transfer
+
+@register
+class ImplicitTransferRule(Rule):
+    """Host materialization of (possibly) device values.
+
+    Inside traced code any `np.*` call, `float()`/`int()` coercion or
+    `.item()`/`.tolist()` forces the tracer concrete — a TracerArrayConversion
+    error at best, a silent per-call device sync when jit falls back to
+    eager at worst. Outside traced code, `np.asarray` on the DeviceGraph
+    edge arrays (`self.src` / `dg.w` ...) is a blocking device->host copy
+    and must be a deliberate, commented choice.
+    """
+
+    rule_id = "JL001"
+    title = "implicit host<->device transfer"
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        cfg = ctx.config
+        flagged: set[int] = set()
+        for root in ctx.jax.traced_roots():
+            for node in ast.walk(root):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _call_name(node)
+                recv = _receiver_name(node)
+                if recv in cfg.numpy_aliases and \
+                        name not in cfg.numpy_meta_calls:
+                    flagged.add(id(node))
+                    yield ctx.finding(
+                        self.rule_id, node,
+                        f"numpy call `{recv}.{name}` inside traced code "
+                        "forces a host round-trip per trace; use jnp or "
+                        "hoist to the host-side build")
+                elif isinstance(node.func, ast.Name) and \
+                        name in cfg.transfer_calls and node.args and \
+                        not isinstance(node.args[0], ast.Constant) and \
+                        not _contains_static_marker(node.args[0]):
+                    yield ctx.finding(
+                        self.rule_id, node,
+                        f"`{name}()` on a traced value concretizes the "
+                        "tracer (host sync); keep it an array or move the "
+                        "read to harvest")
+                elif isinstance(node.func, ast.Attribute) and \
+                        name in ("item", "tolist"):
+                    yield ctx.finding(
+                        self.rule_id, node,
+                        f"`.{name}()` inside traced code blocks on the "
+                        "device and breaks the trace")
+        # outside jit: np.asarray over device-resident graph attributes is a
+        # sync point — allowed only with an explicit suppression + comment
+        for node in ast.walk(ctx.tree):
+            if id(node) in flagged or not isinstance(node, ast.Call):
+                continue
+            recv = _receiver_name(node)
+            if recv not in cfg.numpy_aliases or \
+                    _call_name(node) not in ("asarray", "array"):
+                continue
+            if not node.args:
+                continue
+            a = node.args[0]
+            if isinstance(a, ast.Attribute) and \
+                    isinstance(a.value, ast.Name) and \
+                    a.value.id in cfg.device_receivers and \
+                    a.attr in cfg.device_attrs:
+                yield ctx.finding(
+                    self.rule_id, node,
+                    f"np.asarray({a.value.id}.{a.attr}) materializes a "
+                    "device-resident array on host (blocking sync); if this "
+                    "is deliberate host-side preprocessing, suppress with a "
+                    "justification")
+
+
+# --------------------------------------------------------------------------
+# JL002 — retrace hazards
+
+@register
+class RetraceHazardRule(Rule):
+    """Per-call jit construction and shape-string cache keys.
+
+    `jax.jit(...)` evaluated inside a function body builds a FRESH jitted
+    callable (and jit cache) per call — every invocation recompiles. The
+    steady-state serving invariant (PR 6's apply counters, the RetraceGate)
+    only holds when jitted callables are module-level or cached, so the two
+    cached-once factory idioms are exempt: `return jax.jit(...)` (caller
+    caches the result) and `self.x = jax.jit(...)` (built once in
+    __init__). Shape-derived f-strings used as dict keys are the
+    string-typed version of the same bug: a cache keyed on `f"{x.shape}"`
+    is managing recompiles by hand where static shapes should make them
+    impossible.
+    """
+
+    rule_id = "JL002"
+    title = "retrace hazard"
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        from repro.analysis.jaxctx import _jit_call, _is_jit_ref
+
+        cached = self._cached_factory_calls(ctx.tree)
+        for node, fstack in _walk_with_function(ctx.tree):
+            # NOTE: _walk_with_function yields a FunctionDef with its OWN
+            # name already on the stack, so "nested inside another function"
+            # is len(fstack) > 1 for defs, len(fstack) >= 1 for calls.
+            if fstack and isinstance(node, ast.Call):
+                jc = _jit_call(node)
+                # `partial(jax.jit, ...)` used as a decorator is reported on
+                # the FunctionDef branch below; here catch call-position use
+                if jc is not None and id(node) not in cached and \
+                        not self._is_decorator(ctx, node):
+                    yield ctx.finding(
+                        self.rule_id, node,
+                        "jax.jit(...) constructed inside a function body "
+                        "creates a fresh compile cache per call; hoist to "
+                        "module scope, `return` it from a factory, or cache "
+                        "it on `self`")
+            if len(fstack) > 1 and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if _is_jit_ref(dec) or (isinstance(dec, ast.Call) and
+                                            _jit_call(dec) is not None):
+                        yield ctx.finding(
+                            self.rule_id, dec,
+                            f"nested function `{node.name}` is re-jitted on "
+                            "every enclosing call (fresh compile cache); "
+                            "hoist the jitted def to module scope")
+        # shape-derived string keys
+        for node in ast.walk(ctx.tree):
+            key_exprs: list[ast.AST] = []
+            if isinstance(node, ast.Dict):
+                key_exprs = [k for k in node.keys if k is not None]
+            elif isinstance(node, ast.Subscript):
+                key_exprs = [node.slice]
+            for k in key_exprs:
+                if isinstance(k, ast.JoinedStr) and self._has_shape_ref(k):
+                    yield ctx.finding(
+                        self.rule_id, k,
+                        "f-string cache key derived from an array shape — "
+                        "shape-keyed string caches paper over retraces; key "
+                        "on the static ints themselves")
+
+    @staticmethod
+    def _has_shape_ref(node: ast.AST) -> bool:
+        return any(isinstance(s, ast.Attribute) and
+                   s.attr in ("shape", "dtype")
+                   for s in ast.walk(node))
+
+    @staticmethod
+    def _is_decorator(ctx: ModuleContext, call: ast.Call) -> bool:
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                    any(d is call for d in n.decorator_list):
+                return True
+        return False
+
+    @staticmethod
+    def _cached_factory_calls(tree: ast.AST) -> set[int]:
+        """ids of jit Calls in cached-once positions: the value of a
+        `return` (factory — the caller holds the result) or an assignment
+        to a `self.` attribute (built once, reused per instance)."""
+        from repro.analysis.jaxctx import _jit_call
+
+        out: set[int] = set()
+
+        def _mark(value: ast.AST | None):
+            if value is None:
+                return
+            vals = value.elts if isinstance(value, ast.Tuple) else [value]
+            for v in vals:
+                if isinstance(v, ast.Call) and _jit_call(v) is not None:
+                    out.add(id(v))
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Return):
+                _mark(node.value)
+            elif isinstance(node, ast.Assign) and all(
+                    isinstance(t, ast.Attribute) and
+                    isinstance(t.value, ast.Name) and t.value.id == "self"
+                    for t in node.targets):
+                _mark(node.value)
+        return out
+
+
+# --------------------------------------------------------------------------
+# JL003 — dtype contract
+
+@register
+class DtypeContractRule(Rule):
+    """bf16-storage / f32-accumulation contract + stray float64.
+
+    Packed attributes (`w`, `inv_deg`) may be stored bf16; multiplying them
+    DIRECTLY inside traced code skips the documented upcast-before-multiply
+    and silently accumulates at half precision. And float64 literals in
+    non-test code either upcast a whole device pipeline (2x bandwidth) or
+    get silently truncated by jax's default x64-disabled mode — host-side
+    exact-arithmetic sites (Chebyshev coefficients, EdgeSlots weights,
+    oracles) carry explicit suppressions instead.
+    """
+
+    rule_id = "JL003"
+    title = "dtype contract violation"
+
+    # jaxlint: disable=JL003 -- the rule must name the literal it hunts
+    _F64_NAMES = ("float64", "double")
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        cfg = ctx.config
+        # (a) packed-attribute multiply without upcast, traced code only
+        for root in ctx.jax.traced_roots():
+            for node in ast.walk(root):
+                if not isinstance(node, ast.BinOp) or \
+                        not isinstance(node.op, (ast.Mult, ast.MatMult)):
+                    continue
+                for side in (node.left, node.right):
+                    if isinstance(side, ast.Attribute) and \
+                            side.attr in cfg.packed_attrs:
+                        yield ctx.finding(
+                            self.rule_id, node,
+                            f"`.{side.attr}` may be stored packed (bf16); "
+                            "multiplying it directly skips the f32 upcast — "
+                            "rebind via `.astype(x.dtype)` first (see "
+                            "graph/ops.py:_transition_matmul)")
+        # (b) stray float64 literals
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in self._F64_NAMES and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id in cfg.numpy_aliases + ("jnp", "jax"):
+                yield ctx.finding(
+                    self.rule_id, node,
+                    f"float64 literal `{node.value.id}.{node.attr}` outside "
+                    "tests: device code runs x64-disabled (silent f32 "
+                    "truncation) and host float64 doubles bandwidth — if "
+                    "this is deliberate exact host arithmetic, suppress "
+                    "with a justification")
+            elif isinstance(node, ast.Constant) and \
+                    node.value == "float64":  # jaxlint: disable=JL003 -- rule's own needle
+                yield ctx.finding(
+                    self.rule_id, node,
+                    "string dtype \"float64\" outside tests (see JL003 "
+                    "float64 policy)")
+
+
+# --------------------------------------------------------------------------
+# JL004 — pytree registration drift
+
+@register
+class PytreeDriftRule(Rule):
+    """Fields added to a registered pytree class but not to tree_flatten.
+
+    A field missing from both children and aux silently resets to its
+    default on every jit boundary crossing (unflatten rebuilds without it)
+    — the engine flows through jit/scan, so the drift shows up as wrong
+    state deep in a solve, not as an error. Deliberate exclusions
+    (caches, informational fields) are underscore-prefixed or suppressed.
+    """
+
+    rule_id = "JL004"
+    title = "pytree registration drift"
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        cfg = ctx.config
+        registered = self._registered_classes(ctx.tree)
+        for cls in registered:
+            init = self._method(cls, "__init__")
+            flatten = self._method(cls, "tree_flatten")
+            if init is None or flatten is None:
+                continue
+            assigned = self._self_assigns(init)
+            referenced = self._self_reads(flatten)
+            missing = [a for a in sorted(assigned - referenced)
+                       if not a.startswith(tuple(cfg.pytree_exempt_prefixes))]
+            for name in missing:
+                yield ctx.finding(
+                    self.rule_id, init,
+                    f"pytree class `{cls.name}`: field `{name}` is set in "
+                    "__init__ but absent from tree_flatten — it silently "
+                    "resets when the instance crosses a jit boundary; add "
+                    "it to children/aux or prefix it `_`")
+
+    @staticmethod
+    def _registered_classes(tree: ast.Module) -> list[ast.ClassDef]:
+        by_name = {n.name: n for n in ast.walk(tree)
+                   if isinstance(n, ast.ClassDef)}
+        out: dict[str, ast.ClassDef] = {}
+        for cls in by_name.values():
+            for dec in cls.decorator_list:
+                tail = dec.attr if isinstance(dec, ast.Attribute) else \
+                    dec.id if isinstance(dec, ast.Name) else None
+                if tail == "register_pytree_node_class":
+                    out[cls.name] = cls
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    _callee_tail(node) == "register_pytree_node" and \
+                    node.args and isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in by_name:
+                out[node.args[0].id] = by_name[node.args[0].id]
+        return list(out.values())
+
+    @staticmethod
+    def _method(cls: ast.ClassDef, name: str):
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                    stmt.name == name:
+                return stmt
+        return None
+
+    @staticmethod
+    def _self_assigns(fn) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [node.target]
+            for t in targets:
+                els = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                for el in els:
+                    if isinstance(el, ast.Attribute) and \
+                            isinstance(el.value, ast.Name) and \
+                            el.value.id == "self":
+                        out.add(el.attr)
+        return out
+
+    @staticmethod
+    def _self_reads(fn) -> set[str]:
+        return {node.attr for node in ast.walk(fn)
+                if isinstance(node, ast.Attribute) and
+                isinstance(node.value, ast.Name) and node.value.id == "self"}
+
+
+def _callee_tail(node: ast.Call) -> str | None:
+    return _call_name(node)
+
+
+# --------------------------------------------------------------------------
+# JL005 — donated-buffer reuse
+
+@register
+class DonatedReuseRule(Rule):
+    """Reading a buffer after passing it to a donate_argnums position.
+
+    Donation hands the buffer to XLA for in-place reuse; the caller's
+    reference is dead — reading it afterwards returns garbage (or raises,
+    backend-dependent). Safe pattern: rebind the reference from the call's
+    result, as `patch_device_graph` does.
+    """
+
+    rule_id = "JL005"
+    title = "donated buffer reused"
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        donated = ctx.jax.donated
+        if not donated:
+            return
+        for fi in ctx.jax.functions:
+            yield from self._check_function(ctx, fi.node, donated)
+
+    def _check_function(self, ctx, fn, donated) -> Iterator[Finding]:
+        stmts = list(fn.body)
+        for i, stmt in enumerate(stmts):
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                name = _call_name(call)
+                if name not in donated:
+                    continue
+                watch = []
+                for pos in donated[name]:
+                    if pos < len(call.args):
+                        key = _norm_target(call.args[pos])
+                        if key is not None:
+                            watch.append((key, call.args[pos]))
+                if not watch:
+                    continue
+                rebound = self._rebound_targets(stmt)
+                watch = [(k, a) for (k, a) in watch if k not in rebound]
+                for later in stmts[i + 1:]:
+                    for sub in ast.walk(later):
+                        key = _norm_target(sub)
+                        if key is None:
+                            continue
+                        if isinstance(getattr(sub, "ctx", None), ast.Store):
+                            watch = [(k, a) for (k, a) in watch if k != key]
+                            continue
+                        for k, arg in list(watch):
+                            if k == key:
+                                yield ctx.finding(
+                                    self.rule_id, sub,
+                                    f"`{ast.unparse(sub)}` was donated to "
+                                    f"`{name}` above; its buffer now "
+                                    "belongs to XLA — rebind it from the "
+                                    "call result before reading")
+                                watch = [(w, a2) for (w, a2) in watch
+                                         if w != k]
+
+    @staticmethod
+    def _rebound_targets(stmt: ast.stmt) -> set:
+        out = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                els = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                for el in els:
+                    k = _norm_target(el)
+                    if k is not None:
+                        out.add(k)
+        return out
+
+
+# --------------------------------------------------------------------------
+# JL006 — blocking call outside sanctioned fence points
+
+@register
+class BlockingCallRule(Rule):
+    """`block_until_ready` / `device_get` anywhere but the fences.
+
+    The serve path's latency story depends on EXACTLY ONE device fence per
+    batch (the harvest; see obs/trace.py's host/device span split). A
+    blocking call anywhere else serializes host and device and silently
+    destroys async-dispatch overlap. New fence points must be added to the
+    LintConfig allowlist, which is the documentation.
+    """
+
+    rule_id = "JL006"
+    title = "blocking call outside fence"
+
+    def run(self, ctx: ModuleContext) -> Iterator[Finding]:
+        cfg = ctx.config
+        for node, fstack in _walk_with_function(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name not in cfg.blocking_calls:
+                continue
+            if self._allowed(cfg, ctx.path, fstack):
+                continue
+            where = fstack[-1] if fstack else "<module>"
+            yield ctx.finding(
+                self.rule_id, node,
+                f"blocking `{name}` in `{where}` — the only sanctioned "
+                "fences are " +
+                ", ".join(f"{p}:{f}" for p, f in cfg.blocking_allowed) +
+                "; fence at harvest or add this site to the allowlist")
+
+    @staticmethod
+    def _allowed(cfg, path: str, fstack: tuple[str, ...]) -> bool:
+        for suffix, fn in cfg.blocking_allowed:
+            if path.endswith(suffix) and (fn == "*" or fn in fstack):
+                return True
+        return False

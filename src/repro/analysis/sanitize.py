@@ -1,0 +1,98 @@
+"""Runtime sanitizer tier: jax debug flags for the test suite.
+
+Static rules (JL001..JL006) catch what the AST can prove; this tier turns
+on jax's own runtime checkers for everything the AST can't:
+
+  * ``jax_debug_nans``          — FloatingPointError at the op that first
+                                  produced a NaN (instead of NaN-poisoned
+                                  output three solves later)
+  * ``jax_check_tracer_leaks``  — tracers escaping their trace (the runtime
+                                  twin of JL001's concretization findings)
+  * ``jax_transfer_guard``      — implicit host<->device transfers; "log"
+                                  by default since jax's CPU backend makes
+                                  eager scalar constants a guarded
+                                  transfer, so "disallow" rejects benign
+                                  idioms suite-wide
+
+The checked-in config is ``sanitize_optouts.json`` at the repo root (next
+to ``jaxlint_baseline.json``): it records the default flag values plus
+per-test-module opt-outs, each with a mandatory ``reason`` — the same
+"suppressions carry justifications" contract as the lint baseline.
+``tests/conftest.py`` activates the tier under ``pytest --sanitize``; the
+CI ``tests-sanitized`` job runs the engine+serve suites that way.
+
+jax imports stay inside functions: the lint CLI shares this package and
+must import on a bare Python.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+__all__ = ["SanitizePlan", "load_plan", "applied", "DEFAULT_OPTOUTS_FILE"]
+
+FORMAT_VERSION = 1
+DEFAULT_OPTOUTS_FILE = "sanitize_optouts.json"
+
+# Applied when the opt-out file is absent (e.g. linting a fresh checkout).
+FALLBACK_DEFAULTS = {
+    "jax_debug_nans": True,
+    "jax_check_tracer_leaks": True,
+    "jax_transfer_guard": "log",
+}
+
+
+class SanitizePlan:
+    """Parsed opt-out file: default flag values + per-module overrides."""
+
+    def __init__(self, defaults: dict, modules: dict):
+        self.defaults = dict(defaults)
+        self.modules = dict(modules)
+
+    def flags_for(self, module: str) -> dict:
+        """Effective jax.config flags for one test module."""
+        flags = dict(self.defaults)
+        override = self.modules.get(module, {})
+        flags.update({k: v for k, v in override.items() if k != "reason"})
+        return flags
+
+
+def load_plan(path: Path) -> SanitizePlan:
+    """Read the opt-out file; every module override must carry a reason."""
+    if not path.exists():
+        return SanitizePlan(FALLBACK_DEFAULTS, {})
+    data = json.loads(path.read_text())
+    if data.get("version") != FORMAT_VERSION:
+        raise ValueError(f"{path}: sanitize config version "
+                         f"{data.get('version')!r}, expected {FORMAT_VERSION}")
+    modules = data.get("modules", {})
+    bad = [m for m, o in modules.items()
+           if not str(o.get("reason", "")).strip()]
+    if bad:
+        raise ValueError(f"{path}: sanitizer opt-outs need a `reason`: "
+                         f"{sorted(bad)}")
+    return SanitizePlan(data.get("defaults", FALLBACK_DEFAULTS), modules)
+
+
+class applied:
+    """Context manager applying a flag dict via jax.config, restoring the
+    previous values on exit (so per-module opt-outs stay scoped)."""
+
+    def __init__(self, flags: dict):
+        self.flags = flags
+        self._prev: dict = {}
+
+    def __enter__(self):
+        import jax
+
+        for k, v in self.flags.items():
+            self._prev[k] = getattr(jax.config, k)
+            jax.config.update(k, v)
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+
+        for k, v in self._prev.items():
+            jax.config.update(k, v)
+        return False

@@ -104,6 +104,7 @@ __all__ = [
     "factor_grid",
     "ENGINE_MODES",
     "apply_counts",
+    "apply_trace_log",
     "reset_apply_counts",
 ]
 
@@ -119,9 +120,18 @@ ENGINE_MODES = ("auto", "coo", "hub_tail", "block_ell", "fused", "sharded_1d",
 # through `apply_counts()`.
 APPLY_COUNTS: dict[str, int] = {}
 
+# Trace-time signature log, one entry per apply() that ran under a tracer:
+# (engine_name, "shape dtype" of the operand). Where APPLY_COUNTS says HOW
+# MANY compilations happened, this log says WHAT each one saw — so the
+# RetraceGate (repro.analysis.retrace) can print the offending signature
+# diff instead of just "count went up". Eager applies are not logged.
+APPLY_TRACE_LOG: list[tuple[str, str]] = []
 
-def _count_apply(name: str) -> None:
+
+def _count_apply(name: str, x: jax.Array | None = None) -> None:
     APPLY_COUNTS[name] = APPLY_COUNTS.get(name, 0) + 1
+    if x is not None and isinstance(x, jax.core.Tracer):
+        APPLY_TRACE_LOG.append((name, f"{x.shape} {x.dtype}"))
 
 
 def apply_counts() -> dict[str, int]:
@@ -129,8 +139,14 @@ def apply_counts() -> dict[str, int]:
     return dict(APPLY_COUNTS)
 
 
+def apply_trace_log() -> list[tuple[str, str]]:
+    """Copy of the trace-time (engine, operand signature) event log."""
+    return list(APPLY_TRACE_LOG)
+
+
 def reset_apply_counts() -> None:
     APPLY_COUNTS.clear()
+    APPLY_TRACE_LOG.clear()
 
 
 def _default_cheb_round(y, t, acc, ck):
@@ -164,7 +180,7 @@ class CooEngine:
         return x
 
     def apply(self, x: jax.Array) -> jax.Array:
-        _count_apply("coo")
+        _count_apply("coo", x)
         return spmv(self.dg, x) if x.ndim == 1 else spmm(self.dg, x)
 
     def cheb_round(self, y, t, acc, ck):
@@ -316,7 +332,7 @@ class HubTailEngine:
         return x
 
     def apply(self, x: jax.Array) -> jax.Array:
-        _count_apply(self.name)
+        _count_apply(self.name, x)
         inv = self.inv_deg
         if inv.dtype != x.dtype:
             inv = inv.astype(x.dtype)   # packed storage -> full-precision mul
@@ -372,6 +388,7 @@ class BlockEllEngine:
 
     name = "block_ell"
 
+    # jaxlint: disable=JL004 -- fill_rate is an informational build statistic, deliberately not pytree state
     def __init__(self, block_cols: jax.Array, values: jax.Array,
                  perm: jax.Array, inv_perm: jax.Array, n_orig: int,
                  block: int, use_kernel: bool | None = None,
@@ -450,7 +467,7 @@ class BlockEllEngine:
         return x[self.inv_perm]
 
     def apply(self, x: jax.Array) -> jax.Array:
-        _count_apply(self.name)
+        _count_apply(self.name, x)
         return bsr_spmm(self.block_cols, self.values, x,
                         use_kernel=self.use_kernel, interpret=self.interpret)
 
@@ -599,7 +616,7 @@ class Sharded1DEngine(ShardedEngine):
         return x[: self.n_orig] if self.n_orig != self.n_pad else x
 
     def apply(self, x: jax.Array) -> jax.Array:
-        _count_apply(self.name)
+        _count_apply(self.name, x)
         vec_spec = self._vec_spec(x.ndim)
         edge_spec = P(self.axes)
 
@@ -722,7 +739,7 @@ class Sharded2DEngine(ShardedEngine):
         return x[self.inv_perm][: self.n_orig]
 
     def apply(self, x: jax.Array) -> jax.Array:
-        _count_apply(self.name)
+        _count_apply(self.name, x)
         vec_spec = self._vec_spec(x.ndim)
         edge_spec = P(self.row_axis, self.col_axis)
 

@@ -95,6 +95,7 @@ def degree_prior(g) -> np.ndarray:
     solver output against it where `true_pagerank_dense` (O(n^3)) is
     unaffordable. Host-side float64 numpy; takes a `Graph`.
     """
+    # jaxlint: disable=JL003 -- analytic oracle is host float64 by design
     deg = np.asarray(g.deg, np.float64)
     return deg / max(deg.sum(), 1.0)
 
@@ -422,12 +423,13 @@ def true_pagerank_dense(g, c: float = 0.85, p=None) -> jnp.ndarray:
     """
     import numpy as np
     n = g.n
+    # jaxlint: disable=JL003 -- O(n^3) float64 oracle, test ground truth only
     a = np.zeros((n, n), np.float64)
     a[g.dst, g.src] = 1.0
     deg = a.sum(axis=0)
     p_mat = a / np.maximum(deg, 1.0)[None, :]
     if p is None:
         p = np.ones(n) / n
-    p = np.asarray(p, np.float64)
+    p = np.asarray(p, np.float64)  # jaxlint: disable=JL003 -- oracle precision
     pi = np.linalg.solve(np.eye(n) - c * p_mat, (1.0 - c) * p)
     return pi / pi.sum(axis=0, keepdims=p.ndim > 1)

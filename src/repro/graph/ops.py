@@ -58,9 +58,11 @@ class DeviceGraph:
         padding edges are excluded so sampling never walks them. Call outside
         jit (the result feeds jitted code as plain arguments)."""
         if self._csr is None:
+            # jaxlint: disable=JL001 -- documented one-time host CSR build
             src = np.asarray(self.src)
-            dst = np.asarray(self.dst)
+            dst = np.asarray(self.dst)  # jaxlint: disable=JL001 -- same host build
             if self.w is not None:
+                # jaxlint: disable=JL001 -- padding filter needs concrete w once
                 keep = np.asarray(self.w) > 0
                 src, dst = src[keep], dst[keep]
             deg = np.bincount(src, minlength=self.n).astype(np.int32)
@@ -132,6 +134,7 @@ def device_graph(g: Graph, dtype=jnp.float32,
                       what="device_graph")
     wdtype = jnp.dtype(dtype) if weight_dtype is None else \
         jnp.dtype(weight_dtype)
+    # jaxlint: disable=JL003 -- exact host 1/deg before the device-dtype cast
     deg = np.maximum(g.deg, 1).astype(np.float64)
     inv_deg = 1.0 / deg
     src, dst, w = g.src, g.dst, inv_deg[g.src]
@@ -286,6 +289,7 @@ class EdgeSlots:
                 np.any(kf[1:] == kf[:-1]):
             raise ValueError("edges must be symmetrized and deduplicated")
         inv = 1.0 / np.maximum(deg, 1)
+        # jaxlint: disable=JL003 -- EdgeSlots exact-weight contract, cast at transfer
         w64 = np.zeros(cap, np.float64)
         w64[:m] = inv[src[:m]]
         return cls(n=n, cap=cap, src=src, dst=dst, w64=w64, live=live,

@@ -32,7 +32,9 @@ class Graph:
     dst: np.ndarray  # [m] int32
 
     def __post_init__(self):
+        # jaxlint: disable=JL001 -- Graph is the host numpy container; asarray
         object.__setattr__(self, "src", np.asarray(self.src, np.int32))
+        # jaxlint: disable=JL001 -- normalizes caller input, no device involved
         object.__setattr__(self, "dst", np.asarray(self.dst, np.int32))
         if self.src.shape != self.dst.shape:
             raise ValueError("src/dst shape mismatch")

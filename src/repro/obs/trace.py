@@ -29,6 +29,12 @@ API at a cost of one attribute lookup per call.
 `profiled(logdir)` is the deep-dive hook: it wraps a region in
 `jax.profiler.trace` when a logdir is given (view with TensorBoard or
 Perfetto), and is a free no-op otherwise.
+
+This module (any function) and the service `_harvest` are the ONLY
+sanctioned blocking-fence points: `repro.analysis`'s JL006 rule flags
+`block_until_ready`/`device_get` anywhere else
+(`LintConfig.blocking_allowed` is the allowlist; see
+docs/static-analysis.md).
 """
 from __future__ import annotations
 

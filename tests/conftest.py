@@ -1,0 +1,64 @@
+"""Suite-wide wiring: the `--sanitize` runtime-checker tier + RetraceGate.
+
+`pytest --sanitize` turns on jax's runtime checkers (debug_nans,
+check_tracer_leaks, transfer_guard) for the whole run — the runtime twin
+of the `repro.analysis` static rules. Flag defaults and per-module
+opt-outs (each with a mandatory reason) live in `sanitize_optouts.json`
+at the repo root, next to the lint baseline; CI's `tests-sanitized` job
+runs the engine+serve suites this way.
+"""
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run with jax runtime checkers on (debug_nans, tracer-leak "
+             "checking, transfer guard); per-module opt-outs in "
+             "sanitize_optouts.json")
+
+
+def pytest_configure(config):
+    if not config.getoption("--sanitize"):
+        return
+    from repro.analysis import sanitize
+
+    plan = sanitize.load_plan(REPO_ROOT / sanitize.DEFAULT_OPTOUTS_FILE)
+    config._sanitize_plan = plan
+    # Defaults apply for the whole run; the module fixture below layers
+    # per-module opt-outs on top (and restores on module exit).
+    config._sanitize_ctx = sanitize.applied(plan.defaults)
+    config._sanitize_ctx.__enter__()
+
+
+def pytest_unconfigure(config):
+    ctx = getattr(config, "_sanitize_ctx", None)
+    if ctx is not None:
+        ctx.__exit__(None, None, None)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _sanitize_module_flags(request):
+    """Layer per-module sanitizer opt-outs over the run-wide defaults."""
+    plan = getattr(request.config, "_sanitize_plan", None)
+    if plan is None:
+        yield
+        return
+    from repro.analysis import sanitize
+
+    flags = plan.flags_for(request.module.__name__)
+    with sanitize.applied(flags):
+        yield
+
+
+@pytest.fixture
+def retrace_gate():
+    """The RetraceGate class (imported lazily so collection stays cheap):
+    `with retrace_gate(): ...` asserts zero engine recompiles inside."""
+    from repro.analysis.retrace import RetraceGate
+
+    return RetraceGate

@@ -1,0 +1,15 @@
+"""JL001 negative fixture: static metadata and host numpy stay quiet."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def traced(x):
+    n = float(x.shape[0])        # static shape arithmetic — fine
+    dt = np.dtype("float32")     # metadata-only numpy call — fine
+    return jnp.asarray(x).astype(dt) * n
+
+
+def host_side(edges):
+    return np.asarray(edges)     # plain host numpy, no device receiver

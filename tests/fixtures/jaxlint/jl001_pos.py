@@ -1,0 +1,15 @@
+"""JL001 positive fixture: host materialization inside traced code, plus a
+device->host asarray on a DeviceGraph attribute outside jit."""
+import numpy as np
+import jax
+
+
+@jax.jit
+def traced(x):
+    y = np.asarray(x)            # JL001: numpy call in traced code
+    z = float(x[0])              # JL001: concretizes the tracer
+    return y * z + x.item()      # JL001: .item() blocks on device
+
+
+def host_side(dg):
+    return np.asarray(dg.w)      # JL001: device->host sync, needs suppression

@@ -1,0 +1,26 @@
+"""JL002 negative fixture: module-level jit, factory return, self-cache."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("n",))
+def module_level(x, n):
+    return x * n
+
+
+@jax.jit
+def also_module_level(x):
+    return x + 1
+
+
+def factory(f):
+    return jax.jit(f)            # caller caches the result — fine
+
+
+class Holder:
+    def __init__(self, f):
+        self._step = jax.jit(f)  # built once per instance — fine
+
+    def run(self, x):
+        return self._step(x)

@@ -1,0 +1,22 @@
+"""JL002 positive fixture: per-call jit construction, nested jitted def,
+shape-derived string cache key."""
+import jax
+
+CACHE = {}
+
+
+def per_call(f, x):
+    step = jax.jit(f)            # JL002: fresh compile cache per call
+    return step(x)
+
+
+def nested(x):
+    @jax.jit
+    def inner(y):                # JL002: re-jitted every enclosing call
+        return y * 2
+    return inner(x)
+
+
+def keyed(x):
+    CACHE[f"{x.shape}"] = x      # JL002: shape-string cache key
+    return x

@@ -1,0 +1,13 @@
+"""JL003 positive fixture: packed-attr multiply in a traced contract method,
+stray float64 literal, string float64 dtype."""
+import numpy as np
+
+
+class Engine:
+    def apply(self, x):          # traced by contract (engine protocol)
+        return self.w * x        # JL003: packed bf16 multiply, no upcast
+
+
+def host():
+    a = np.zeros(3, np.float64)  # JL003: stray float64
+    return a.astype("float64")   # JL003: string dtype

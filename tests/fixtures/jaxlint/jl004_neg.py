@@ -1,0 +1,29 @@
+"""JL004 negative fixture: every field flattened or underscore-exempt."""
+import jax
+from jax import tree_util
+
+
+@jax.tree_util.register_pytree_node_class
+class Leafy:
+    def __init__(self, a, n):
+        self.a = a
+        self.n = n
+        self._cache = None           # underscore prefix: exempt
+
+    def tree_flatten(self):
+        return (self.a,), self.n
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+class Plain:                         # not registered: rule ignores it
+    def __init__(self, a):
+        self.a = a
+        self.b = a
+
+
+def register_other():
+    tree_util.register_pytree_node(Plain, lambda p: ((p.a,), None),
+                                   lambda aux, c: Plain(c[0]))

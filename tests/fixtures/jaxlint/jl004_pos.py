@@ -1,0 +1,17 @@
+"""JL004 positive fixture: a registered pytree class with a field missing
+from tree_flatten."""
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+class Leafy:
+    def __init__(self, a, extra):
+        self.a = a
+        self.extra = extra           # JL004: absent from tree_flatten
+
+    def tree_flatten(self):
+        return (self.a,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], None)

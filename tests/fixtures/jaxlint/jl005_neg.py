@@ -1,0 +1,20 @@
+"""JL005 negative fixture: the safe rebind-from-result pattern."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def consume(buf, y):
+    return buf + y
+
+
+def good(buf, y):
+    buf = consume(buf, y)        # rebound from the call result
+    return buf.sum()
+
+
+def also_good(buf, y):
+    out = consume(buf, y)
+    buf = out * 2                # rebound before any read
+    return buf

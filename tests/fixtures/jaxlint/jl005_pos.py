@@ -1,0 +1,14 @@
+"""JL005 positive fixture: reading a buffer after donating it."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def consume(buf, y):
+    return buf + y
+
+
+def bad(buf, y):
+    out = consume(buf, y)
+    return buf.sum() + out       # JL005: buf's buffer belongs to XLA now

@@ -1,0 +1,8 @@
+"""JL006 negative fixture: async dispatch only, nothing blocks."""
+import jax
+
+
+def hot_loop(x):
+    y = x * 2
+    jax.device_put(y)            # placement, not a fence
+    return y

@@ -1,0 +1,9 @@
+"""JL006 positive fixture: blocking calls outside the sanctioned fences."""
+import jax
+
+
+def hot_loop(x):
+    y = x * 2
+    jax.block_until_ready(y)     # JL006: fence outside the allowlist
+    z = jax.device_get(y)        # JL006: blocking device->host pull
+    return z

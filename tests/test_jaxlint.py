@@ -1,0 +1,211 @@
+"""jaxlint static analysis: rule fixtures, suppressions, baseline, self-lint.
+
+Every rule has a positive fixture proving it fires and a negative fixture
+proving it stays quiet (tests/fixtures/jaxlint/); the self-lint test runs
+the real linter over src/ against the committed baseline, so a PR that
+introduces a new violation fails HERE as well as in the CI lint job.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, LintConfig, all_rules, fingerprint,
+                            lint_file, lint_paths, lint_source)
+from repro.analysis.baseline import BaselineEntry, TODO_JUSTIFICATION
+from repro.analysis import sanitize
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "jaxlint"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+ALL_RULES = ("JL001", "JL002", "JL003", "JL004", "JL005", "JL006")
+
+
+def fixture_rules(name: str, config: LintConfig | None = None) -> list[str]:
+    res = lint_file(FIXTURES / name, root=FIXTURES, config=config)
+    assert not res.errors, res.errors
+    return [f.rule for f in res.findings]
+
+
+class TestRuleFixtures:
+    def test_registry_is_complete(self):
+        assert tuple(sorted(all_rules())) == ALL_RULES
+
+    @pytest.mark.parametrize("rule,expected", [
+        ("JL001", 4),   # np call, float(), .item() in jit; dg.w asarray out
+        ("JL002", 3),   # per-call jit, nested jitted def, shape-string key
+        ("JL003", 3),   # packed multiply, float64 literal, "float64" string
+        ("JL004", 1),   # field missing from tree_flatten
+        ("JL005", 1),   # read after donation
+        ("JL006", 2),   # block_until_ready + device_get outside fences
+    ])
+    def test_positive_fixture_fires(self, rule, expected):
+        found = fixture_rules(f"{rule.lower()}_pos.py")
+        assert found.count(rule) == expected, found
+
+    @pytest.mark.parametrize("rule", ALL_RULES)
+    def test_negative_fixture_stays_quiet(self, rule):
+        found = fixture_rules(f"{rule.lower()}_neg.py")
+        assert rule not in found, found
+
+    def test_jl006_allowlist_silences_the_positive(self):
+        cfg = LintConfig(blocking_allowed=(("jl006_pos.py", "*"),))
+        found = fixture_rules("jl006_pos.py", config=cfg)
+        assert "JL006" not in found
+
+    def test_select_and_ignore(self):
+        only = LintConfig(select=frozenset({"JL006"}))
+        assert set(fixture_rules("jl001_pos.py", config=only)) == set()
+        skip = LintConfig(ignore=frozenset({"JL001"}))
+        assert "JL001" not in fixture_rules("jl001_pos.py", config=skip)
+
+
+class TestSuppressions:
+    SRC = ("import numpy as np\n"
+           "import jax\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return np.asarray(x)\n")
+
+    def test_finding_without_suppression(self):
+        res = lint_source(self.SRC, path="t.py")
+        assert [f.rule for f in res.findings] == ["JL001"]
+
+    def test_inline_trailing_suppression(self):
+        src = self.SRC.replace(
+            "np.asarray(x)",
+            "np.asarray(x)  # jaxlint: disable=JL001 -- test justification")
+        res = lint_source(src, path="t.py")
+        assert not res.findings
+        assert [f.rule for f in res.suppressed] == ["JL001"]
+
+    def test_comment_line_suppresses_next_line(self):
+        src = self.SRC.replace(
+            "    return np.asarray(x)",
+            "    # jaxlint: disable=JL001 -- host build\n"
+            "    return np.asarray(x)")
+        res = lint_source(src, path="t.py")
+        assert not res.findings and len(res.suppressed) == 1
+
+    def test_file_level_suppression(self):
+        src = "# jaxlint: disable-file=JL001\n" + self.SRC
+        res = lint_source(src, path="t.py")
+        assert not res.findings and len(res.suppressed) == 1
+
+    def test_wrong_rule_id_does_not_suppress(self):
+        src = self.SRC.replace(
+            "np.asarray(x)",
+            "np.asarray(x)  # jaxlint: disable=JL006 -- wrong rule")
+        res = lint_source(src, path="t.py")
+        assert [f.rule for f in res.findings] == ["JL001"]
+
+    def test_comma_list_suppresses_multiple_rules(self):
+        src = self.SRC.replace(
+            "np.asarray(x)",
+            "np.asarray(x)  # jaxlint: disable=JL001,JL003 -- both")
+        res = lint_source(src, path="t.py")
+        assert not res.findings
+
+    def test_syntax_error_is_an_error_not_a_crash(self):
+        res = lint_source("def f(:\n", path="bad.py")
+        assert res.errors and not res.findings
+
+
+class TestBaseline:
+    def _finding(self):
+        res = lint_source(TestSuppressions.SRC, path="t.py")
+        return res.findings[0]
+
+    def test_round_trip(self, tmp_path):
+        f = self._finding()
+        bl = Baseline([BaselineEntry(rule=f.rule, path=f.path,
+                                     fingerprint=fingerprint(f),
+                                     justification="test: known host build",
+                                     code=f.code, line=f.line)])
+        p = tmp_path / "bl.json"
+        bl.save(p)
+        loaded = Baseline.load(p)
+        new, baselined, stale = loaded.split([f])
+        assert not new and len(baselined) == 1 and not stale
+
+    def test_fingerprint_survives_line_drift_not_code_edits(self):
+        f = self._finding()
+        moved = type(f)(rule=f.rule, path=f.path, line=f.line + 40,
+                        col=f.col, message=f.message, code=f.code)
+        assert fingerprint(moved) == fingerprint(f)
+        edited = type(f)(rule=f.rule, path=f.path, line=f.line, col=f.col,
+                         message=f.message, code=f.code + " + 1")
+        assert fingerprint(edited) != fingerprint(f)
+
+    def test_missing_justification_rejected(self, tmp_path):
+        f = self._finding()
+        bl = Baseline([BaselineEntry(rule=f.rule, path=f.path,
+                                     fingerprint=fingerprint(f),
+                                     justification=TODO_JUSTIFICATION)])
+        p = tmp_path / "bl.json"
+        bl.save(p)
+        with pytest.raises(ValueError, match="justification"):
+            Baseline.load(p)
+        # but --update-baseline's loader accepts it
+        assert len(Baseline.load(p, require_justifications=False).entries) == 1
+
+    def test_stale_entries_reported(self, tmp_path):
+        bl = Baseline([BaselineEntry(rule="JL001", path="gone.py",
+                                     fingerprint="0" * 16,
+                                     justification="was real once")])
+        new, baselined, stale = bl.split([self._finding()])
+        assert len(new) == 1 and not baselined and len(stale) == 1
+
+    def test_version_mismatch_rejected(self, tmp_path):
+        p = tmp_path / "bl.json"
+        p.write_text(json.dumps({"version": 99, "findings": []}))
+        with pytest.raises(ValueError, match="version"):
+            Baseline.load(p)
+
+
+class TestSelfLint:
+    def test_src_tree_is_clean_against_committed_baseline(self):
+        results = lint_paths([REPO_ROOT / "src"], root=REPO_ROOT)
+        assert not [e for r in results for e in r.errors]
+        findings = [f for r in results for f in r.findings]
+        bl = Baseline.load(REPO_ROOT / "jaxlint_baseline.json")
+        new, _, stale = bl.split(findings)
+        assert not new, "unbaselined findings:\n" + \
+            "\n".join(f.format() for f in new)
+        assert not stale, "stale baseline entries: " + \
+            ", ".join(e.fingerprint for e in stale)
+
+    def test_committed_baseline_entries_all_justified(self):
+        bl = Baseline.load(REPO_ROOT / "jaxlint_baseline.json")
+        assert all(len(e.justification.split()) >= 3 for e in bl.entries)
+
+
+class TestSanitizePlan:
+    def test_committed_optouts_load(self):
+        plan = sanitize.load_plan(REPO_ROOT / sanitize.DEFAULT_OPTOUTS_FILE)
+        assert plan.defaults["jax_debug_nans"] is True
+        assert plan.defaults["jax_check_tracer_leaks"] is True
+
+    def test_module_override_layering(self):
+        plan = sanitize.SanitizePlan(
+            {"jax_debug_nans": True, "jax_transfer_guard": "log"},
+            {"tests.test_x": {"jax_debug_nans": False, "reason": "r"}})
+        assert plan.flags_for("tests.test_x")["jax_debug_nans"] is False
+        assert plan.flags_for("tests.test_x")["jax_transfer_guard"] == "log"
+        assert plan.flags_for("tests.test_y")["jax_debug_nans"] is True
+
+    def test_optout_without_reason_rejected(self, tmp_path):
+        p = tmp_path / "s.json"
+        p.write_text(json.dumps({
+            "version": 1, "defaults": {},
+            "modules": {"m": {"jax_debug_nans": False}}}))
+        with pytest.raises(ValueError, match="reason"):
+            sanitize.load_plan(p)
+
+    def test_applied_restores_flags(self):
+        import jax
+
+        before = jax.config.jax_debug_nans
+        with sanitize.applied({"jax_debug_nans": not before}):
+            assert jax.config.jax_debug_nans is (not before)
+        assert jax.config.jax_debug_nans is before

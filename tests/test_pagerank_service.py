@@ -297,3 +297,47 @@ class TestValidation:
             registry.apply_updates("g", insert=[(0, g.n)])
         with pytest.raises(ValueError):
             registry.apply_updates("g", insert=[(3, 3)])
+
+
+class TestRetraceGate:
+    """Steady-state serving must not recompile: the RetraceGate
+    (repro.analysis.retrace) watches the engine trace-time apply log."""
+
+    def test_steady_state_ticks_have_zero_recompiles(self, retrace_gate):
+        g = generators.tri_mesh(13, 17)
+        svc = make_service(g, max_batch=8)
+        # Warm up: first solo query compiles the bucket-1 solve.
+        svc.query("g", seeds=(0, 1), top_k=5)
+        svc.query("g", seeds=(2, 3), top_k=5)
+        solves_before = svc.stats["solves"]
+        with retrace_gate():
+            for i in range(20):
+                svc.query("g", seeds=(4 + i, 30 + i), top_k=5)
+        # The gate must have watched real solves, not cache hits.
+        assert svc.stats["solves"] == solves_before + 20
+
+    def test_gate_trips_on_batch_bucket_change(self, retrace_gate):
+        from repro.analysis.retrace import RetraceError
+
+        g = generators.tri_mesh(13, 17)
+        svc = make_service(g, max_batch=8)
+        svc.query("g", seeds=(0,), top_k=5)      # warm bucket 1 only
+        with pytest.raises(RetraceError) as ei:
+            with retrace_gate():
+                # Two distinct-seed queries batch together -> bucket 2 ->
+                # a fresh [n, 2] trace of the solve.
+                svc.submit(PPRQuery(qid=100, graph="g", seeds=(1,), top_k=5))
+                svc.submit(PPRQuery(qid=101, graph="g", seeds=(2,), top_k=5))
+                svc.run_until_drained()
+        msg = str(ei.value)
+        assert "NEW signature" in msg        # shape drift, not pytree churn
+        assert "warmup signatures" in msg    # the diff names both sides
+
+    def test_gate_allowance_tolerates_expected_traces(self, retrace_gate):
+        g = generators.tri_mesh(9, 11)
+        svc = make_service(g, max_batch=8)
+        svc.query("g", seeds=(0,), top_k=5)
+        with retrace_gate(allowed=4):
+            svc.submit(PPRQuery(qid=200, graph="g", seeds=(1,), top_k=5))
+            svc.submit(PPRQuery(qid=201, graph="g", seeds=(2,), top_k=5))
+            svc.run_until_drained()
