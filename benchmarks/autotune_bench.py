@@ -1,0 +1,123 @@
+"""Heuristic vs measured engine selection, end to end.
+
+For every (family, B) the bench asks both selection tiers for an engine —
+`heuristic_mode` (the zero-cost `mode="auto"` constants) and an `Autotuner`
+over the persistent tuning store (`mode="tuned"`) — then times the FULL
+`cpaa_fixed` solve under each pick. Two invariants worth money:
+
+  * tuned never loses to auto beyond measurement jitter: `pick_winner`'s
+    tie-break keeps the heuristic's choice whenever it measures within
+    jitter_tol of the best, so a regression here is a tuner bug;
+  * tuned wins outright where the constants mis-pick. The anchor family is
+    powerlaw (Barabasi-Albert, 8k vertices): its hub edge fraction is well
+    under HUB_TAIL_MIN_EDGE_FRAC's n-gate (n < HUB_TAIL_MIN_N) so auto
+    stays on COO, yet hub/tail measures ~1.3x faster — exactly the class
+    of workload (degree skew dominating undirected PageRank cost) the
+    paper's parallel layout argument is about.
+
+The tuner runs against the real store path ($REPRO_TUNE_CACHE in CI, where
+actions/cache persists it keyed on store version + jax): a warm run
+performs zero tuning solves and the records say so via `source`.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_schedule
+from repro.core.autotune import Autotuner, TuningStore
+from repro.core.engine import heuristic_mode, select_engine
+from repro.core.pagerank import cpaa_fixed
+from repro.graph import generators
+
+ROUNDS = 12   # same Table 2 operating point as engine_bench
+
+
+def _families(quick: bool):
+    # powerlaw is in BOTH tiers: it is the family the acceptance criterion
+    # (tuned beats auto where the heuristic mis-picks) is anchored on
+    if quick:
+        return {
+            "mesh": lambda: generators.tri_mesh(60, 60),
+            "kmer": lambda: generators.kmer_chains(4_000),
+            "powerlaw": lambda: generators.powerlaw_ba(8_000, 8),
+        }
+    return {
+        "mesh": lambda: generators.tri_mesh(140, 140),
+        "community": lambda: generators.caveman(60, 100, seed=0),
+        "kmer": lambda: generators.kmer_chains(20_000),
+        "powerlaw": lambda: generators.powerlaw_ba(8_000, 8),
+    }
+
+
+def autotune_compare(quick: bool = False, batches=(8, 128),
+                     tune_cache=None):
+    """Returns (csv_rows, json_records).
+
+    Same interleaved min-over-reps discipline as engine_bench: reps cycle
+    round-robin over every (family, B, selector) combo so shared-runner
+    load windows hit all combos alike. Selection cost (the tuner's
+    measurement pass) is reported separately from solve time — it is paid
+    once per workload bucket, amortized by the store, not per solve.
+    """
+    reps = 5
+    sched = make_schedule(0.85, rounds=ROUNDS)
+    coeffs = jnp.asarray(sched.coeffs, jnp.float32)
+    tuner = Autotuner(TuningStore(tune_cache), budget_s=10.0)
+    combos = []   # dicts: family, g, B, selector, mode, source, eng, p
+    for fam, gen in _families(quick).items():
+        g = gen()
+        for bt in batches:
+            auto_mode = heuristic_mode(g, bt, probe_cache=tuner.store)
+            t0 = time.perf_counter()
+            dec = tuner.tune(g, bt, graph_name=fam)
+            tune_s = time.perf_counter() - t0
+            key = jax.random.PRNGKey(0)
+            p = jnp.abs(jax.random.normal(key, (g.n, bt), jnp.float32))
+            eng_auto = select_engine(g, batch=bt, mode=auto_mode,
+                                     probe_cache=tuner.store)
+            eng_tuned = eng_auto if dec.mode == auto_mode else \
+                (dec.engine if dec.engine is not None
+                 else select_engine(g, batch=bt, mode=dec.mode,
+                                    probe_cache=tuner.store))
+            for selector, mode, eng in (("auto", auto_mode, eng_auto),
+                                        ("tuned", dec.mode, eng_tuned)):
+                combos.append({"family": fam, "g": g, "B": bt,
+                               "selector": selector, "mode": mode,
+                               "source": dec.source, "tune_s": tune_s,
+                               "eng": eng, "p": p})
+
+    for cb in combos:   # compile + warm every combo first
+        pi, _ = cpaa_fixed(cb["eng"], coeffs, cb["p"], rounds=ROUNDS)
+        jax.block_until_ready(pi)
+    best = [float("inf")] * len(combos)
+    for _ in range(reps):
+        for i, cb in enumerate(combos):
+            t0 = time.perf_counter()
+            pi, _ = cpaa_fixed(cb["eng"], coeffs, cb["p"], rounds=ROUNDS)
+            jax.block_until_ready(pi)
+            best[i] = min(best[i], time.perf_counter() - t0)
+
+    rows = [("family", "n", "m", "B", "selector", "engine", "us_per_solve",
+             "speedup_vs_auto", "source")]
+    records = []
+    t_auto = {(cb["family"], cb["B"]): dt
+              for cb, dt in zip(combos, best) if cb["selector"] == "auto"}
+    for cb, dt in zip(combos, best):
+        g = cb["g"]
+        rec = {"family": cb["family"], "n": g.n, "m": g.m, "B": cb["B"],
+               "selector": cb["selector"], "engine": cb["mode"],
+               "rounds": ROUNDS,
+               "us_per_solve": round(dt * 1e6, 1),
+               "speedup_vs_auto": round(
+                   t_auto[(cb["family"], cb["B"])] / dt, 3),
+               "source": cb["source"],
+               "tune_ms": round(cb["tune_s"] * 1e3, 1)}
+        records.append(rec)
+        rows.append((cb["family"], g.n, g.m, cb["B"], cb["selector"],
+                     cb["mode"], rec["us_per_solve"],
+                     rec["speedup_vs_auto"], cb["source"]))
+    return rows, records

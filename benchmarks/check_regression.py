@@ -1,19 +1,28 @@
 """Benchmark regression gate for CI.
 
-Compares the fresh `engine_compare`, `adaptive_compare`, `update_churn`,
-`scale_compare`, `serve_pagerank` AND `load_bench` records of a
-`benchmarks.run --json` output against the committed baseline
-(BENCH_pagerank.json) and fails when any entry — keyed (family, B, engine)
-for engine_compare, (family, B, "engine/mode") for adaptive_compare,
-(family, batch_edges, "update/mode") for update_churn (per-batch update
-latency, so update-path regressions gate like solve regressions), (family,
-B, "scale-engine/weight_dtype") for the paper-scale per-iteration times,
-(family, B, "serve/mean" | "serve/p99") for the serving section (the p99
-key gates TAIL latency, which a mean can hide), and (family, B,
-"load-tenant/sched" | "goodput-tenant/sched") for the open-loop scheduling
-section (per-tenant p99 under bursty load, plus goodput-under-SLO inverted
-to us-per-good-query so lower is better) — slowed down by more than
+Compares the fresh `engine_compare`, `autotune_compare`,
+`adaptive_compare`, `update_churn`, `scale_compare`, `serve_pagerank` AND
+`load_bench` records of a `benchmarks.run --json` output against the
+committed baseline (BENCH_pagerank.json) and fails when any entry — keyed
+(family, B, engine) for engine_compare, (family, B, "tuned-selector") for
+autotune_compare (heuristic vs measured engine selection: the
+"tuned-tuned" keys gate the tuner's pick end to end), (family, B,
+"engine/mode") for adaptive_compare, (family, batch_edges, "update/mode")
+for update_churn (per-batch update latency, so update-path regressions
+gate like solve regressions), (family, B, "scale-engine/weight_dtype") for
+the paper-scale per-iteration times, (family, B, "serve/mean" |
+"serve/p99") for the serving section (the p99 key gates TAIL latency,
+which a mean can hide), and (family, B, "load-tenant/sched" |
+"goodput-tenant/sched") for the open-loop scheduling section (per-tenant
+p99 under bursty load, plus goodput-under-SLO inverted to
+us-per-good-query so lower is better) — slowed down by more than
 --threshold.
+
+Benchmark numbers only compare within one backend: when BOTH files carry a
+`meta.backend` stamp and they differ (a cpu baseline against a tpu run),
+the gate REFUSES to compare — exit 2, with instructions to regenerate the
+baseline — instead of silently normalizing a cross-backend ratio into
+nonsense.
 
 CI runners and dev machines differ in absolute speed, so by default each
 entry's new/old time ratio is normalized by the MEDIAN ratio across all
@@ -44,12 +53,21 @@ import sys
 SKIP_MARKER = "[bench-skip]"
 
 
-def _load_entries(path: str) -> dict[tuple, float]:
+def _load_payload(path: str) -> tuple[dict, dict[tuple, float]]:
+    """(meta, entries) of one benchmark JSON; meta may be empty (old files
+    and the test fixtures carry none — the backend refusal only applies
+    when both sides are stamped)."""
     with open(path) as f:
         payload = json.load(f)
+    meta = payload.get("meta") or {}
     out = {}
     for rec in payload.get("engine_compare", []):
         out[(rec["family"], rec["B"], rec["engine"])] = rec["us_per_solve"]
+    for rec in payload.get("autotune_compare", []):
+        # "tuned-auto" is the heuristic pick timed by the autotune bench,
+        # "tuned-tuned" the measured pick — disjoint from engine_compare
+        out[(rec["family"], rec["B"],
+             f"tuned-{rec['selector']}")] = rec["us_per_solve"]
     for rec in payload.get("adaptive_compare", []):
         # "engine/mode" keeps these keys disjoint from engine_compare's
         out[(rec["family"], rec["B"],
@@ -86,7 +104,7 @@ def _load_entries(path: str) -> dict[tuple, float]:
         if rec.get("goodput_qps", 0.0) > 0.0:
             out[(rec["family"], rec["B"], f"goodput-{tag}")] = \
                 1e6 / rec["goodput_qps"]
-    return out
+    return meta, out
 
 
 def _commit_message() -> str:
@@ -135,8 +153,16 @@ def main(argv=None) -> int:
               f"benchmark regression gate")
         return 0
 
-    old = _load_entries(args.old)
-    new = _load_entries(args.new)
+    old_meta, old = _load_payload(args.old)
+    new_meta, new = _load_payload(args.new)
+    ob, nb = old_meta.get("backend"), new_meta.get("backend")
+    if ob is not None and nb is not None and ob != nb:
+        print(f"backend mismatch: baseline {args.old} was measured on "
+              f"{ob!r}, fresh {args.new} on {nb!r} — benchmark times only "
+              f"compare within one backend. Regenerate the baseline on "
+              f"{nb!r} (benchmarks.run --json) instead of gating across "
+              f"backends.")
+        return 2
     shared = sorted(set(old) & set(new))
     if not shared:
         print(f"no shared engine_compare entries between {args.old} and "

@@ -29,9 +29,18 @@ class PPRServeConfig:
     cache_capacity: int = 4096
     max_top_k: int = 16
     # solve-engine format: "auto" (device-count + degree-skew + fill-rate
-    # heuristic), "coo", "hub-tail", "block_ell", "fused", "sharded-1d" or
-    # "sharded-2d" — see core/engine.select_engine and docs/performance.md
+    # heuristic), "tuned" (measured selection via core/autotune: the
+    # workload-bucketed tuning store, measure-on-miss), "coo", "hub-tail",
+    # "block_ell", "fused", "sharded-1d" or "sharded-2d" — see
+    # core/engine.select_engine and docs/performance.md
     engine: str = "auto"
+    # tuned mode only: tuning-store path (None = $REPRO_TUNE_CACHE or
+    # ~/.cache/repro_pagerank/tuning.json), per-graph measurement budget in
+    # seconds, and whether a store miss falls back to the heuristic instead
+    # of measuring (require_cached — for latency-critical starts)
+    tune_cache: str | None = None
+    tune_budget_s: float = 2.0
+    tune_require_cached: bool = False
     # packed storage dtype for edge weights / inv_deg ("bfloat16" halves
     # them; accumulation stays f32). None = solve dtype. Parity bound:
     # L1 <= ~1e-3 on normalized PageRank (the one 1/deg rounding).
@@ -116,7 +125,10 @@ def make_service(cfg: PPRServeConfig):
                         update_mode=cfg.update_mode,
                         weight_dtype=None if cfg.weight_dtype is None
                         else jnp.dtype(cfg.weight_dtype),
-                        ingest_chunk_edges=cfg.ingest_chunk_edges)
+                        ingest_chunk_edges=cfg.ingest_chunk_edges,
+                        tune_cache=cfg.tune_cache,
+                        tune_budget_s=cfg.tune_budget_s,
+                        tune_require_cached=cfg.tune_require_cached)
     for name, dataset, scale in cfg.graphs:
         reg.register(name, generators.paper_dataset(dataset, scale))
     tenants = [TenantSpec(name=n, priority=p,

@@ -13,6 +13,14 @@ from repro.core.chebyshev import (
     rounds_for_tolerance,
     sigma_c,
 )
+from repro.core.autotune import (
+    Autotuner,
+    TuningStore,
+    WorkloadKey,
+    default_tuner,
+    graph_fingerprint,
+    pick_winner,
+)
 from repro.core.engine import (
     BlockEllEngine,
     CooEngine,
@@ -22,6 +30,7 @@ from repro.core.engine import (
     ShardedEngine,
     as_engine,
     factor_grid,
+    heuristic_mode,
     select_engine,
 )
 from repro.core.pagerank import (
@@ -45,5 +54,7 @@ __all__ = [
     "monte_carlo", "power", "true_pagerank_dense",
     "CooEngine", "BlockEllEngine", "FusedBlockEllEngine", "ShardedEngine",
     "Sharded1DEngine", "Sharded2DEngine", "as_engine", "factor_grid",
-    "select_engine",
+    "heuristic_mode", "select_engine",
+    "Autotuner", "TuningStore", "WorkloadKey", "default_tuner",
+    "graph_fingerprint", "pick_winner",
 ]

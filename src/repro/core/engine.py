@@ -100,6 +100,7 @@ __all__ = [
     "Sharded1DEngine",
     "Sharded2DEngine",
     "as_engine",
+    "heuristic_mode",
     "select_engine",
     "factor_grid",
     "ENGINE_MODES",
@@ -108,8 +109,8 @@ __all__ = [
     "reset_apply_counts",
 ]
 
-ENGINE_MODES = ("auto", "coo", "hub_tail", "block_ell", "fused", "sharded_1d",
-                "sharded_2d")
+ENGINE_MODES = ("auto", "tuned", "coo", "hub_tail", "block_ell", "fused",
+                "sharded_1d", "sharded_2d")
 
 # Per-engine-class apply() invocation counts. apply() runs at TRACE time
 # under jit, so in a jitted serving loop these count COMPILATIONS of the
@@ -822,6 +823,68 @@ def _hub_edge_fraction(g: Graph, thr: int) -> float:
     return float(deg[deg >= thr].sum()) / m
 
 
+def _auto_choice(g: Graph, batch: int | None = None, *, block: int = 128,
+                 min_fill: float | None = None, mesh: Mesh | None = None,
+                 sharded_min_n: int | None = None, probe_cache=None):
+    """The zero-cost heuristic's decision, WITHOUT building anything:
+    (mode, perm), where perm is the BFS permutation when the fill probe ran
+    fresh (the block-ELL build reuses it; None on a probe-cache hit or a
+    non-tiled pick). `probe_cache` is any object with
+    get_fill(g, block) / put_fill(g, block, fill) — see core.autotune."""
+    # multi-device: shard when the graph is large enough that the
+    # per-device row work dominates the per-round collective (1D moves ~n
+    # floats/device/round; 2D ~n/R + n/C, but needs a still-larger n to
+    # amortize its two collective phases and grid padding).
+    n_dev = int(mesh.devices.size) if mesh is not None else jax.device_count()
+    thr = SHARDED_MIN_N if sharded_min_n is None else sharded_min_n
+    if n_dev >= 2 and g.n >= thr:
+        if n_dev >= 4 and g.n >= 4 * thr and \
+                (mesh is None or len(mesh.axis_names) >= 2):
+            return "sharded_2d", None
+        return "sharded_1d", None
+
+    # single device, paper-scale skew: when the hubs carry most of the
+    # edge mass the degree split beats any uniform layout (and the fill-rate
+    # probe below — a host BFS + tile count — is exactly what we'd rather
+    # not run on a 10^7-edge scattered graph)
+    if g.n >= HUB_TAIL_MIN_N and \
+            _hub_edge_fraction(g, HubTailEngine.DEFAULT_MIN_DEG) >= \
+            HUB_TAIL_MIN_EDGE_FRAC:
+        return "hub_tail", None
+
+    # too small to tile -> COO without paying the host-side build
+    if g.n < 2 * block or (batch is not None and batch < 8 and g.n < 8 * block):
+        return "coo", None
+    # probe the tiling fill WITHOUT materializing tile values — scattered
+    # graphs (the ones that fail the threshold) are exactly where the
+    # [n_rb, S, B, B] tensor would be largest, and this runs on every
+    # serving epoch bump; the probe cache remembers the fill per (graph
+    # fingerprint, block) so re-probes of an already-seen shape skip the
+    # host BFS + tile census entirely
+    fill = perm = None
+    if probe_cache is not None:
+        fill = probe_cache.get_fill(g, block)
+    if fill is None:
+        fill, perm = block_fill_rate(g, block=block)
+        if probe_cache is not None:
+            probe_cache.put_fill(g, block, fill)
+    threshold = _default_min_fill() if min_fill is None else min_fill
+    if fill < threshold:
+        return "coo", None
+    return "fused", perm
+
+
+def heuristic_mode(g: Graph, batch: int | None = None, *, block: int = 128,
+                   min_fill: float | None = None, mesh: Mesh | None = None,
+                   sharded_min_n: int | None = None, probe_cache=None) -> str:
+    """What `select_engine(mode="auto")` would pick for (g, batch), as a
+    concrete mode string, without building the engine — the zero-cost tier
+    the autotuner measures against (and ties back toward)."""
+    return _auto_choice(g, batch, block=block, min_fill=min_fill, mesh=mesh,
+                        sharded_min_n=sharded_min_n,
+                        probe_cache=probe_cache)[0]
+
+
 def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                   dg: DeviceGraph | None = None, dtype=jnp.float32,
                   block: int = 128, min_fill: float | None = None,
@@ -829,7 +892,7 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
                   stable_shapes: bool = False, mesh: Mesh | None = None,
                   grid: tuple[int, int] | None = None, lane: int = 128,
                   comm_dtype=None, sharded_min_n: int | None = None,
-                  weight_dtype=None):
+                  weight_dtype=None, tuner=None, probe_cache=None):
     """Pick/build the solve engine for a graph (host-side, once per epoch).
 
     mode: "coo" | "hub_tail" | "block_ell" | "fused" | "sharded_1d" |
@@ -841,7 +904,11 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
     HUB_TAIL_MIN_N and hubs receiving >= HUB_TAIL_MIN_EDGE_FRAC of the
     edges) take the hub/tail split, and everything else falls to the
     fill-rate choice: block-ELL when its tile fill-rate clears `min_fill`
-    (dense-enough tiles to beat segment_sum), otherwise COO.
+    (dense-enough tiles to beat segment_sum), otherwise COO. "tuned"
+    replaces the guess with a measurement: the workload-bucketed autotuner
+    (core.autotune) consults its persistent store and, on a miss, times
+    the feasible candidates and picks the measured winner (tie-break
+    toward the heuristic's choice).
     batch: expected personalization width (auto mode nudges tiny batches on
     small graphs back to COO; the MXU win needs columns to amortize the
     tiling round-trip).
@@ -855,6 +922,10 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
     weight_dtype: packed storage dtype for edge weights / inv_deg on the
     COO and hub-tail paths (bf16 halves them; accumulation stays in
     `dtype`). The tile/partition engines ignore it (f32 values).
+    tuner: the `core.autotune.Autotuner` mode="tuned" consults (None = the
+    process-wide default over `$REPRO_TUNE_CACHE`).
+    probe_cache: fill-probe cache for auto mode (get_fill/put_fill; None =
+    probe every call — the serving registry threads the process cache).
     """
     mode = mode.replace("-", "_")
     if mode not in ENGINE_MODES:
@@ -869,6 +940,23 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
         return HubTailEngine.from_graph(g, dtype=dtype,
                                         weight_dtype=weight_dtype)
 
+    perm = None
+    if mode == "tuned":
+        from repro.core.autotune import default_tuner  # lazy: no cycle
+        t = default_tuner() if tuner is None else tuner
+        dec = t.tune(g, batch=batch, dg=dg, dtype=dtype, block=block,
+                     min_fill=min_fill, use_kernel=use_kernel,
+                     interpret=interpret, stable_shapes=stable_shapes,
+                     mesh=mesh, grid=grid, lane=lane, comm_dtype=comm_dtype,
+                     sharded_min_n=sharded_min_n, weight_dtype=weight_dtype)
+        if dec.engine is not None:   # freshly measured winner: reuse as-is
+            return dec.engine
+        mode = dec.mode
+    if mode == "auto":
+        mode, perm = _auto_choice(g, batch, block=block, min_fill=min_fill,
+                                  mesh=mesh, sharded_min_n=sharded_min_n,
+                                  probe_cache=probe_cache)
+
     if mode == "coo":
         return coo()
     if mode == "hub_tail":
@@ -877,51 +965,9 @@ def select_engine(g: Graph, batch: int | None = None, mode: str = "auto", *,
         cls = BlockEllEngine if mode == "block_ell" else FusedBlockEllEngine
         return cls.from_graph(g, block=block, use_kernel=use_kernel,
                               interpret=interpret,
-                              pad_slots_to_pow2=stable_shapes)
+                              pad_slots_to_pow2=stable_shapes, perm=perm)
     if mode == "sharded_1d":
         return Sharded1DEngine.from_graph(g, mesh=mesh, lane=lane,
                                           dtype=dtype, comm_dtype=comm_dtype)
-    if mode == "sharded_2d":
-        return Sharded2DEngine.from_graph(g, mesh=mesh, grid=grid, lane=lane,
-                                          dtype=dtype, comm_dtype=comm_dtype)
-
-    # auto, multi-device: shard when the graph is large enough that the
-    # per-device row work dominates the per-round collective (1D moves ~n
-    # floats/device/round; 2D ~n/R + n/C, but needs a still-larger n to
-    # amortize its two collective phases and grid padding).
-    n_dev = int(mesh.devices.size) if mesh is not None else jax.device_count()
-    thr = SHARDED_MIN_N if sharded_min_n is None else sharded_min_n
-    if n_dev >= 2 and g.n >= thr:
-        if n_dev >= 4 and g.n >= 4 * thr and \
-                (mesh is None or len(mesh.axis_names) >= 2):
-            return Sharded2DEngine.from_graph(g, mesh=mesh, grid=grid,
-                                              lane=lane, dtype=dtype,
-                                              comm_dtype=comm_dtype)
-        return Sharded1DEngine.from_graph(g, mesh=mesh, lane=lane,
-                                          dtype=dtype, comm_dtype=comm_dtype)
-
-    # auto, single device, paper-scale skew: when the hubs carry most of the
-    # edge mass the degree split beats any uniform layout (and the fill-rate
-    # probe below — a host BFS + tile count — is exactly what we'd rather
-    # not run on a 10^7-edge scattered graph)
-    if g.n >= HUB_TAIL_MIN_N and \
-            _hub_edge_fraction(g, HubTailEngine.DEFAULT_MIN_DEG) >= \
-            HUB_TAIL_MIN_EDGE_FRAC:
-        return hub_tail()
-
-    # auto: too small to tile -> COO without paying the host-side build
-    if g.n < 2 * block or (batch is not None and batch < 8 and g.n < 8 * block):
-        return coo()
-    # probe the tiling fill WITHOUT materializing tile values — scattered
-    # graphs (the ones that fail the threshold) are exactly where the
-    # [n_rb, S, B, B] tensor would be largest, and this runs on every
-    # serving epoch bump
-    fill, perm = block_fill_rate(g, block=block)
-    threshold = _default_min_fill() if min_fill is None else min_fill
-    if fill < threshold:
-        return coo()
-    return FusedBlockEllEngine.from_graph(g, block=block,
-                                          use_kernel=use_kernel,
-                                          interpret=interpret,
-                                          pad_slots_to_pow2=stable_shapes,
-                                          perm=perm)
+    return Sharded2DEngine.from_graph(g, mesh=mesh, grid=grid, lane=lane,
+                                      dtype=dtype, comm_dtype=comm_dtype)

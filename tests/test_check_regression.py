@@ -145,3 +145,53 @@ def test_update_churn_entries_gate_with_their_own_floor(tmp_path):
                        capture_output=True, text=True, timeout=60)
     assert r.returncode == 0, r.stdout
     assert "info" in r.stdout
+
+
+def test_backend_mismatch_refuses_to_compare(tmp_path):
+    """A baseline stamped with a different meta.backend than the fresh run
+    must refuse (exit 2) instead of normalizing cross-backend ratios; files
+    without a meta stamp (all the fixtures above) keep comparing."""
+    def payload(backend):
+        p = _payload(BASE)
+        if backend is not None:
+            p["meta"] = {"backend": backend, "device_count": 1}
+        return p
+    po, pn = tmp_path / "o.json", tmp_path / "n.json"
+    po.write_text(json.dumps(payload("cpu")))
+    pn.write_text(json.dumps(payload("tpu")))
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 2, r.stdout
+    assert "backend mismatch" in r.stdout
+    # one-sided stamp (old baseline predates meta) -> still compares
+    po.write_text(json.dumps(payload(None)))
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stdout
+
+
+def test_autotune_compare_entries_are_gated(tmp_path):
+    """autotune_compare records join the gate keyed (family, B,
+    tuned-selector) so the tuner's end-to-end pick gates like any other
+    solve timing."""
+    def payload(slow: float):
+        return {
+            "engine_compare": [{"family": "mesh", "B": 1, "engine": "coo",
+                                "us_per_solve": 50000.0}],
+            "autotune_compare": [
+                {"family": "powerlaw", "B": 8, "selector": "auto",
+                 "engine": "coo", "us_per_solve": 100000.0},
+                {"family": "powerlaw", "B": 8, "selector": "tuned",
+                 "engine": "hub_tail", "us_per_solve": 80000.0 * slow},
+            ],
+        }
+    po, pn = tmp_path / "o.json", tmp_path / "n.json"
+    po.write_text(json.dumps(payload(1.0)))
+    pn.write_text(json.dumps(payload(2.0)))  # tuned pick regressed 2x
+    r = subprocess.run([sys.executable, SCRIPT, "--old", str(po), "--new",
+                        str(pn), "--commit-msg", "routine"],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1, r.stdout
+    assert "tuned-tuned" in r.stdout
